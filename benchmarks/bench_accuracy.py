@@ -1,0 +1,68 @@
+"""Paper Tables III/IV: test accuracy of GD / Adadelta / Adagrad / Adam /
+pdADMM-G / pdADMM-G-Q on the nine benchmark datasets (synthetic twins),
+10-layer GA-MLP, greedy layerwise training for the ADMM variants."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import DATASET_SCALES, print_rows, write_csv
+from repro.core import gd_baseline as G
+from repro.core import pdadmm, quantize
+from repro.core.greedy import greedy_train
+from repro.core.pdadmm import ADMMConfig
+
+from repro.graph.datasets import TABLE_II, synthetic
+
+GD_METHODS = [("gd", 1e-1), ("adadelta", 1.0), ("adagrad", 1e-2),
+              ("adam", 1e-3)]
+
+
+def run(hidden: int = 100, epochs: int = 90, datasets=None, seeds=(0,)):
+    # default: the four CPU-feasible datasets; pass datasets=list(TABLE_II)
+    # for all nine (hours on 1 core)
+    datasets = datasets or ["cora", "citeseer", "pubmed", "amazon_photo"]
+    rows = []
+    for name in datasets:
+        ds = synthetic(name, scale=min(DATASET_SCALES[name], 1.0))
+        X = ds.augmented(4)
+        dims = [X.shape[1]] + [hidden] * 9 + [ds.n_classes]
+        accs = {}
+        for method, lr in GD_METHODS:
+            vals = []
+            for s in seeds:
+                _, h = G.train_gd(jax.random.PRNGKey(s), X, ds.labels,
+                                  ds.masks, dims, method, lr, epochs * 2)
+                vals.append(h["test_acc"])
+            accs[method] = vals
+        grid8 = pdadmm.calibrate_grid(
+            jax.random.PRNGKey(0), X,
+            [X.shape[1]] + [hidden] + [ds.n_classes], 8)
+        # NOTE: the paper's Table-V hyperparams (ν=ρ=1e-4) are tuned for the
+        # real datasets; the synthetic twins need ν=1e-2, ρ=1 (validated in
+        # tests) — hyperparameters are data-dependent, re-tuned per Sec V-B.
+        for variant, cfg in (
+            ("pdADMM-G", ADMMConfig(nu=1e-2, rho=1.0)),
+            ("pdADMM-G-Q", ADMMConfig(
+                nu=1e-2, rho=1.0, quantize_p=True, grid=grid8)),
+        ):
+            vals = []
+            for s in seeds:
+                _, h = greedy_train(jax.random.PRNGKey(s), X, ds.labels,
+                                    ds.masks, hidden, ds.n_classes,
+                                    schedule=(2, 5, 10),
+                                    epochs_per_stage=epochs // 3, config=cfg)
+                vals.append(h["test_acc"][-1])
+            accs[variant] = vals
+        import numpy as np
+        for method, vals in accs.items():
+            rows.append([name, method, f"{np.mean(vals):.3f}",
+                         f"{np.std(vals):.3f}"])
+    header = ["dataset", "method", "test_acc_mean", "test_acc_std"]
+    write_csv("tables_3_4_accuracy", header, rows)
+    print_rows("tables_3_4_accuracy (paper Tables III/IV, synthetic twins)",
+               header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Shared benchmark helpers: dataset prep, timing, CSV output."""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+
+import jax
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+ART.mkdir(parents=True, exist_ok=True)
+
+# CPU-feasible scales for the nine Table-II datasets. The synthetic generator
+# preserves class/feature/split *structure*; scale shrinks |V|,|E| for the
+# 1-core container. Trends (not absolute accuracy) are the reproduction bar.
+DATASET_SCALES = {
+    "cora": 1.0, "citeseer": 1.0, "pubmed": 0.25,
+    "amazon_computers": 0.3, "amazon_photo": 0.5,
+    "coauthor_cs": 0.2, "coauthor_physics": 0.12,
+    "flickr": 0.05, "ogbn_arxiv": 0.03,
+}
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats, out
+
+
+def write_csv(name: str, header, rows):
+    path = ART / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def print_rows(name: str, header, rows):
+    print(f"\n== {name} ==")
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

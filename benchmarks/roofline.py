@@ -1,0 +1,106 @@
+"""§Roofline: read the dry-run artifacts, derive the three-term roofline per
+(arch x shape x mesh), name the dominant bottleneck, and compute the
+roofline fraction (useful-compute time / dominant term).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import print_rows, write_csv
+from repro.analysis.model_flops import model_flops
+from repro.configs.base import ALL_SHAPES, ARCH_IDS, SHAPES_BY_NAME, get_arch
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def _hint(dom: str, cell: dict) -> str:
+    kinds = cell.get("collectives", {}).get("by_kind", {})
+    biggest = max(kinds.items(), key=lambda kv: kv[1]["moved_bytes"])[0] \
+        if kinds else "none"
+    if dom == "collective":
+        return (f"dominant wire kind is {biggest}; reshard to remove "
+                f"redundant gathers / quantize payloads (pdADMM-G-Q trick)")
+    if dom == "memory":
+        return "raise arithmetic intensity: fuse epilogues, widen tiles, cache KV in VMEM"
+    return "compute-bound: reduce non-model flops (remat policy, dispatch einsums)"
+
+
+def load_cell(mesh_kind: str, arch: str, shape: str, tag: str = ""):
+    p = ART / mesh_kind / arch / f"{shape}{tag}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def analyze_cell(cell: dict, arch: str, shape_name: str):
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n_dev = cell["n_devices"]
+    flops_dev = cell["flops_per_device"]
+    mem_bytes = cell.get("dot_bytes_per_device", 0.0)
+    coll = cell["collectives"]["total"]["moved_bytes"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    coll_s = coll / ICI_BW
+    mf = model_flops(cfg, shape) / n_dev
+    useful_s = mf / PEAK_FLOPS
+    dom_val = max(compute_s, memory_s, coll_s)
+    dom = ("compute" if dom_val == compute_s
+           else "memory" if dom_val == memory_s else "collective")
+    return {
+        "arch": arch, "shape": shape_name, "mesh": cell["mesh_kind"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops_dev,
+        "flops_ratio": mf / flops_dev if flops_dev else 0.0,
+        "roofline_frac": useful_s / dom_val if dom_val else 0.0,
+        "peak_bytes": cell.get("memory", {}).get("peak_live_bytes", 0),
+        "hint": _hint(dom, cell),
+    }
+
+
+def run(mesh_kind: str = "single", tag: str = ""):
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in ALL_SHAPES:
+            cell = load_cell(mesh_kind, arch, shape.name, tag)
+            if cell is None:
+                continue
+            if cell.get("status") == "skip":
+                rows.append([arch, shape.name, "SKIP", "-", "-", "-", "-",
+                             "-", "-", cell["reason"][:48]])
+                continue
+            if cell.get("status") != "ok":
+                rows.append([arch, shape.name, "ERROR", "-", "-", "-", "-",
+                             "-", "-", cell.get("error", "")[:48]])
+                continue
+            a = analyze_cell(cell, arch, shape.name)
+            rows.append([
+                arch, shape.name, a["dominant"],
+                f"{a['compute_s']*1e3:.2f}", f"{a['memory_s']*1e3:.2f}",
+                f"{a['collective_s']*1e3:.2f}", f"{a['flops_ratio']:.2f}",
+                f"{a['roofline_frac']:.3f}",
+                f"{a['peak_bytes']/2**30:.1f}", a["hint"][:60]])
+    header = ["arch", "shape", "dominant", "compute_ms", "memory_ms",
+              "collective_ms", "model/hlo_flops", "roofline_frac",
+              "peak_GiB", "what_moves_it"]
+    write_csv(f"roofline_{mesh_kind}{tag}", header, rows)
+    print_rows(f"roofline ({mesh_kind} mesh{tag})", header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    run(args.mesh, args.tag)

@@ -1,0 +1,50 @@
+"""Benchmark orchestrator — one entry per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --only comm,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: convergence,speedup_layers,"
+                         "speedup_devices,comm,accuracy,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced epochs/datasets (CI-sized)")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    def want(name):
+        return not only or name in only
+
+    t0 = time.time()
+    if want("convergence"):
+        from benchmarks import bench_convergence
+        bench_convergence.run(epochs=20 if args.fast else 40)
+    if want("speedup_layers"):
+        from benchmarks import bench_speedup
+        bench_speedup.run_layers(neurons=256 if args.fast else 512)
+    if want("speedup_devices"):
+        from benchmarks import bench_speedup
+        bench_speedup.run_devices(L=8 if args.fast else 16)
+    if want("comm"):
+        from benchmarks import bench_comm
+        bench_comm.run(epochs=10 if args.fast else 25)
+    if want("accuracy"):
+        from benchmarks import bench_accuracy
+        datasets = ["cora", "citeseer"] if args.fast else None
+        bench_accuracy.run(epochs=30 if args.fast else 90, datasets=datasets)
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.run("single")
+        roofline.run("multi")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

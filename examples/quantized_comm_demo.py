@@ -1,0 +1,63 @@
+"""Distributed stage-parallel pdADMM-G with a quantized ICI wire — runs the
+shard_map runtime on 8 simulated devices and prints the HLO-level proof that
+the int8 wire shrinks the collective-permute payloads (the paper's Fig 5
+claim at the compiler level).
+
+  python examples/quantized_comm_demo.py       (sets its own XLA_FLAGS)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.analysis import hlo as H
+from repro.core import quantize
+from repro.core.pdadmm import ADMMConfig
+from repro.graph.datasets import tiny
+from repro.parallel import stage_parallel as SP
+
+
+def wire_bytes(mesh, cfg, V=256, h=64, L=8, C=4):
+    step, _ = SP.make_distributed_step(mesh, L, C, cfg)
+    st = jax.eval_shape(lambda k: SP.init_stack(k, jnp.zeros((V, h)), L, cfg),
+                        jax.random.PRNGKey(0))
+    lowered = step.lower(st, jax.ShapeDtypeStruct((V, h), jnp.float32),
+                         jax.ShapeDtypeStruct((V,), jnp.int32),
+                         jax.ShapeDtypeStruct((V,), jnp.float32))
+    stats = H.analyze(lowered.compile().as_text(), 8)
+    return stats.coll_summary()["by_kind"].get(
+        "collective-permute", {"payload_bytes": 0})["payload_bytes"]
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    fp = wire_bytes(mesh, ADMMConfig(nu=1e-2, rho=1.0))
+    g8 = quantize.uniform_grid(8, -2.0, 6.0)
+    q8 = wire_bytes(mesh, ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True,
+                                     quantize_q=True, grid=g8))
+    print(f"collective-permute payload per iteration (per device):")
+    print(f"  fp32 wire : {fp:10d} bytes")
+    print(f"  int8 wire : {q8:10d} bytes  ({100*(1-q8/fp):.0f}% saved)")
+
+    # and it still converges:
+    ds = tiny(V=128)
+    X = ds.augmented(4)
+    key = jax.random.PRNGKey(0)
+    P0 = jax.random.normal(key, (X.shape[1], 64)) * jnp.sqrt(2.0 / X.shape[1])
+    Xp = jnp.maximum(X @ P0, 0)
+    cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, quantize_q=True,
+                     grid=g8)
+    _, hist = SP.distributed_train(mesh, key, Xp, ds.labels, ds.masks, 8,
+                                   ds.n_classes, cfg, epochs=15)
+    print(f"quantized-wire objective: {hist['objective'][0]:.3f} -> "
+          f"{hist['objective'][-1]:.3f} (residual {hist['residual'][-1]:.1e})")
+
+
+if __name__ == "__main__":
+    main()

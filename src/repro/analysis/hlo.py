@@ -1,0 +1,358 @@
+"""Post-SPMD HLO analysis: FLOPs, HBM traffic, and collective bytes — with
+loop-trip multipliers.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis counts a ``while``
+body ONCE, so anything scanned over layers (everything here) is undercounted
+by ~n_layers. We parse the per-device HLO module text instead:
+
+  * computations + call graph (while/call/fusion/conditional edges),
+  * loop trip counts from the loop-condition ``s32[] constant(N)``,
+  * per-op symbol table (name -> shape) incl. computation parameters,
+  * dot FLOPs from ``dot_dimension_numbers`` (2*batch*m*n*k),
+  * HBM traffic = sum over *top-level* ops (post-fusion buffers) of
+    result + operand bytes (fusion internals stay on-chip),
+  * collective payloads with ring-model moved-bytes.
+
+Everything is multiplied by the product of enclosing loop trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_KIND_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DOT_DIMS_RE = re.compile(
+    r"lhs_batch_dims=\{([\d,]*)\}.*?lhs_contracting_dims=\{([\d,]*)\}"
+    r".*?rhs_batch_dims=\{([\d,]*)\}.*?rhs_contracting_dims=\{([\d,]*)\}")
+_DOT_DIMS_RE2 = re.compile(
+    r"lhs_contracting_dims=\{([\d,]*)\}.*?rhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+# ops that do not cause HBM traffic of their own
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+               "after-all", "iota", "partition-id", "replica-id", "domain",
+               "opt-barrier", "bitcast-convert"}
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shapes_bytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_shapes: list
+    line: str
+    args: str = ""
+
+
+def _parse_def(line: str):
+    """Parse '%name = <type> kind(args), attrs...'. Robust to tuple result
+    types containing '/*index=N*/' comments and metadata with '='."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") and not s[:1].isalpha():
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].lstrip("%")
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        restype, rest2 = rest[: i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        restype, rest2 = rest[:sp], rest[sp:]
+    m = _KIND_RE.match(rest2)
+    if not m:
+        return None
+    kind = m.group(1)
+    # argument list: matched parens after the kind
+    astart = rest2.find("(", m.start(1))
+    depth, j = 0, astart
+    for j in range(astart, len(rest2)):
+        if rest2[j] == "(":
+            depth += 1
+        elif rest2[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = rest2[astart + 1: j]
+    return name, restype, kind, args
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, list]     # name -> result shapes
+    lines: List[str]
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = Computation(m.group(1), [], {}, [])
+            comps[cur.name] = cur
+            # parameters from signature
+            for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],\{\}]+))",
+                                  m.group(2)):
+                cur.symbols[pm.group(1)] = _parse_shapes(pm.group(2))
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.lines.append(line)
+        dm = _parse_def(line)
+        if dm:
+            name, restype, kind, args = dm
+            shapes = _parse_shapes(restype)
+            cur.symbols[name] = shapes
+            cur.ops.append(Op(name, kind, shapes, line, args))
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def _call_graph(comps: Dict[str, Computation]):
+    """edges: comp -> [(child, trip)]; fusion_comps: called via calls="""
+    edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    fusion_comps = set()
+    reduce_comps = set()
+    for name, comp in comps.items():
+        for op in comp.ops:
+            line = op.line
+            if op.kind == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond, body = wm.groups()
+                    consts = [int(c) for c in
+                              _CONST_RE.findall("\n".join(comps[cond].lines))] \
+                        if cond in comps else []
+                    trip = max(consts) if consts else 1
+                    edges[name].append((body, trip))
+                    edges[name].append((cond, trip))
+            elif op.kind == "fusion":
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    fusion_comps.add(cm.group(1))
+                    edges[name].append((cm.group(1), 1))
+            elif op.kind == "conditional":
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    for child in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        edges[name].append((child, 1))
+            else:
+                tm = _TOAPPLY_RE.search(line)
+                if tm:
+                    child = tm.group(1)
+                    if op.kind in ("reduce", "all-reduce", "reduce-scatter",
+                                   "reduce-window", "scatter", "sort", "map",
+                                   "select-and-scatter"):
+                        reduce_comps.add(child)
+                    else:
+                        edges[name].append((child, 1))
+    return edges, fusion_comps, reduce_comps
+
+
+def _multipliers(comps, edges, entry: Optional[str]) -> Dict[str, int]:
+    mult: Dict[str, int] = defaultdict(int)
+    start = entry if entry in comps else (next(iter(comps)) if comps else None)
+    if start is None:
+        return mult
+    stack = [(start, 1)]
+    while stack:
+        name, m = stack.pop()
+        if m <= mult.get(name, 0):
+            continue
+        mult[name] = m
+        for child, trip in edges.get(name, ()):
+            stack.append((child, m * trip))
+    return mult
+
+
+def _dot_flops(op: Op, symbols) -> float:
+    ops_names = _OPERAND_RE.findall(op.args)
+    if len(ops_names) < 2:
+        return 0.0
+    lhs = symbols.get(ops_names[0])
+    rhs = symbols.get(ops_names[1])
+    if not lhs or not rhs:
+        return 0.0
+    lhs_dims, rhs_dims = lhs[0][1], rhs[0][1]
+    m = _DOT_DIMS_RE.search(op.line)
+    if m:
+        lb = [int(x) for x in m.group(1).split(",") if x]
+        lc = [int(x) for x in m.group(2).split(",") if x]
+    else:
+        m2 = _DOT_DIMS_RE2.search(op.line)
+        if not m2:
+            return 0.0
+        lb, lc = [], [int(x) for x in m2.group(1).split(",") if x]
+    batch = 1
+    for d in lb:
+        if d < len(lhs_dims):
+            batch *= lhs_dims[d]
+    contract = 1
+    for d in lc:
+        if d < len(lhs_dims):
+            contract *= lhs_dims[d]
+    lhs_free = 1
+    for i, d in enumerate(lhs_dims):
+        if i not in lb and i not in lc:
+            lhs_free *= d
+    rhs_total = 1
+    for d in rhs_dims:
+        rhs_total *= d
+    rhs_free = rhs_total // max(batch * contract, 1)
+    return 2.0 * batch * contract * lhs_free * rhs_free
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    computation: str
+    payload_bytes: int
+    group_size: int
+    multiplier: int = 1
+
+    @property
+    def moved_bytes(self) -> float:
+        n, b = self.group_size, self.payload_bytes * self.multiplier
+        if n <= 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * (n - 1) / n * b
+        if self.kind == "all-gather":
+            return (n - 1) / n * b
+        if self.kind == "reduce-scatter":
+            return float(n - 1) * b
+        if self.kind in ("all-to-all", "ragged-all-to-all"):
+            return (n - 1) / n * b
+        return float(b)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0                 # dot flops only, loop-corrected
+    hbm_bytes: float = 0.0             # post-fusion buffer traffic (UPPER bound:
+    #                                    the CPU backend fuses less than TPU)
+    dot_bytes: float = 0.0             # dot operands+results only (LOWER bound;
+    #                                    weights, activations at matmuls, KV reads)
+    collectives: List[Collective] = dataclasses.field(default_factory=list)
+    xla_reported_flops: float = 0.0    # cost_analysis (body-once) for reference
+
+    def coll_summary(self) -> dict:
+        by_kind = defaultdict(lambda: {"count": 0, "payload_bytes": 0,
+                                       "moved_bytes": 0.0})
+        for c in self.collectives:
+            d = by_kind[c.kind]
+            d["count"] += c.multiplier
+            d["payload_bytes"] += c.payload_bytes * c.multiplier
+            d["moved_bytes"] += c.moved_bytes
+        total = {k: sum(d[k] for d in by_kind.values())
+                 for k in ("count", "payload_bytes", "moved_bytes")}
+        return {"by_kind": {k: dict(v) for k, v in by_kind.items()},
+                "total": total}
+
+
+def analyze(hlo: str, n_devices: int) -> HloStats:
+    comps = _split_computations(hlo)
+    edges, fusion_comps, reduce_comps = _call_graph(comps)
+    mult = _multipliers(comps, edges, _entry_name(hlo))
+
+    stats = HloStats()
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue  # unreachable (dead or metadata) computation
+        in_fusion = name in fusion_comps or name in reduce_comps
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                stats.flops += m * _dot_flops(op, comp.symbols)
+                db = _shapes_bytes(op.result_shapes)
+                for opnd in _OPERAND_RE.findall(op.args):
+                    if opnd in comp.symbols:
+                        db += _shapes_bytes(comp.symbols[opnd])
+                stats.dot_bytes += m * db
+            is_coll = any(op.kind == c or op.kind == c + "-start"
+                          for c in COLLECTIVE_OPS)
+            if is_coll:
+                gm = _GROUPS_RE.search(op.line)
+                if gm:
+                    gsize = int(gm.group(2))
+                else:
+                    ge = _GROUPS_EXPL_RE.search(op.line)
+                    gsize = len(ge.group(1).split(",")) if ge else n_devices
+                kind = next(c for c in COLLECTIVE_OPS if op.kind.startswith(c))
+                stats.collectives.append(Collective(
+                    kind, name, _shapes_bytes(op.result_shapes), gsize, m))
+            if in_fusion or op.kind in _NO_TRAFFIC:
+                continue
+            # HBM traffic: result + operands (post-fusion buffers)
+            b = _shapes_bytes(op.result_shapes)
+            for opnd in _OPERAND_RE.findall(op.args):
+                if opnd in comp.symbols:
+                    b += _shapes_bytes(comp.symbols[opnd])
+            stats.hbm_bytes += m * b
+    return stats
+
+
+# Back-compat helper used by dryrun
+def analyze_collectives(hlo: str, n_devices: int):
+    st = analyze(hlo, n_devices)
+    return st.collectives, st.coll_summary()

@@ -1,0 +1,133 @@
+"""Fault-tolerant checkpointing: atomic sharded npz checkpoints with a
+manifest, keep-N rotation, and ELASTIC restore (load onto a different mesh /
+sharding than the one that saved — the resize path for node failures).
+
+Layout:
+  <dir>/step_000123/
+      manifest.json        {step, n_leaves, treedef, shapes, dtypes, extra}
+      leaf_00000.npy ...   one file per pytree leaf (host-gathered)
+      _COMMITTED           written LAST -> crash-safe marker
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _treedef_str(tree) -> str:
+    return str(jax.tree.structure(tree))
+
+
+# numpy can't serialize ml_dtypes (bfloat16, fp8): store a same-width uint
+# view and record the true dtype in the manifest.
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _to_savable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[name]), name
+    return arr, name
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_DTYPES:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        leaves, treedef = jax.tree.flatten(tree)
+        tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
+        try:
+            shapes, dtypes = [], []
+            for i, leaf in enumerate(leaves):
+                arr = np.asarray(jax.device_get(leaf))
+                savable, dtype_name = _to_savable(arr)
+                np.save(tmp / f"leaf_{i:05d}.npy", savable)
+                shapes.append(list(arr.shape))
+                dtypes.append(dtype_name)
+            manifest = {
+                "step": step,
+                "n_leaves": len(leaves),
+                "treedef": _treedef_str(tree),
+                "shapes": shapes,
+                "dtypes": dtypes,
+                "extra": extra or {},
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            (tmp / "_COMMITTED").write_text("ok")
+            final = self.dir / f"step_{step:09d}"
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)          # atomic on the same fs
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._rotate()
+        return final
+
+    def _rotate(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # -- load ----------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if (p / "_COMMITTED").exists():
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of `like`. With `shardings` (a pytree of
+        NamedSharding), leaves are placed directly onto the CURRENT mesh —
+        elastic re-shard: the saved mesh shape is irrelevant because leaves
+        are stored host-complete."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves_like, treedef = jax.tree.flatten(like)
+        assert manifest["n_leaves"] == len(leaves_like), \
+            (manifest["n_leaves"], len(leaves_like))
+        shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "spec"))
+                        if shardings is not None else [None] * len(leaves_like))
+        out = []
+        for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
+            arr = _from_saved(np.load(d / f"leaf_{i:05d}.npy"),
+                              manifest["dtypes"][i])
+            a = jnp.asarray(arr, dtype=ref.dtype if hasattr(ref, "dtype") else None)
+            if shd is not None:
+                a = jax.device_put(a, shd)
+            out.append(a)
+        return jax.tree.unflatten(treedef, out), manifest
+
+    def restore_extra(self, step: Optional[int] = None) -> dict:
+        step = step if step is not None else self.latest_step()
+        d = self.dir / f"step_{step:09d}"
+        return json.loads((d / "manifest.json").read_text())["extra"]

@@ -1,0 +1,148 @@
+"""block-pdADMM (beyond paper): the pdADMM-G splitting generalized from
+affine+ReLU layers to arbitrary residual blocks (transformer layers).
+
+Formulation (DESIGN.md §4): per block l with params W_l and input p_l,
+  z_l = Block_l(p_l; W_l),  f_l = identity,  constraint p_{l+1} = q_l,
+  F = R(z_L; y) + (ν/2) Σ ||z_l - Block_l(p_l)||² + (ν/2) Σ ||q_l - z_l||².
+
+Updates:
+  p_l : one gradient step on φ_l via a *local* VJP through Block_l only
+        (the paper's own p/W updates are single quadratic-approximation
+        gradient steps, so this stays in its spirit — no cross-layer BP),
+  W_l : one local gradient step,
+  z_l : closed form — argmin (ν/2)[(z-B)² + (q-z)² + (z-z_old)²]
+        = (B + q + z_old)/3 for hidden; FISTA against R for the last block,
+  q_l : (ρ p_{l+1} + u_l + ν z_l)/(ρ+ν)     [f = identity]
+  u_l : u += ρ(p_{l+1} - q_l).
+
+The quantized variant projects p (and optionally q) to the grid exactly as in
+Problem 3. Distribution: blocks shard over the `model` axis (one transformer
+layer per stage slot), tokens over `data` — neighbor exchange is the same
+quantized ppermute as ``stage_parallel``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pdadmm import ADMMConfig
+
+
+class BlockState(NamedTuple):
+    p: jax.Array        # [L, B, S, d] block inputs
+    W: Any              # pytree, leaves stacked [L, ...]
+    z: jax.Array        # [L, B, S, d] block outputs (pre-split)
+    q: jax.Array        # [L, B, S, d]
+    u: jax.Array        # [L, B, S, d]
+
+
+def init_block_state(block_fn, params_stacked, x0, L: int,
+                     config: ADMMConfig) -> BlockState:
+    """Forward-consistent init: scan blocks, record inputs/outputs."""
+    def body(x, p):
+        z = block_fn(p, x)
+        return z, (x, z)
+
+    _, (ps, zs) = jax.lax.scan(body, x0, params_stacked)
+    qs = zs
+    if config.quantize_p and config.grid is not None:
+        qs = config.grid.project(zs)
+    return BlockState(p=ps, W=params_stacked, z=zs, q=qs,
+                      u=jnp.zeros_like(zs))
+
+
+def make_block_iterate(block_fn: Callable, risk_fn: Callable,
+                       config: ADMMConfig, *, lr_w: float = 1e-3,
+                       fista_iters: int = 10):
+    """Build one block-pdADMM iteration (vmapped over stacked blocks).
+
+    block_fn(params_l, p_l) -> z_l ; risk_fn(z_last) -> scalar.
+    """
+    nu, rho = config.nu, config.rho
+    p_grid = config.grid if config.quantize_p else None
+    q_grid = config.grid if config.quantize_q else None
+
+    def iterate(st: BlockState, x0):
+        L = st.p.shape[0]
+        q_prev = jnp.concatenate([x0[None], st.q[:-1]], axis=0)
+        u_prev = jnp.concatenate([jnp.zeros_like(st.u[:1]), st.u[:-1]], axis=0)
+        is_first = (jnp.arange(L) == 0).reshape((L,) + (1,) * (st.p.ndim - 1))
+        is_last = (jnp.arange(L) == L - 1).reshape(is_first.shape)
+
+        # ---- p-update: local VJP, quadratic-approx step --------------------
+        def phi_p(p, W, z, qp, up, first):
+            r = z - block_fn(W, p)
+            d = p - qp
+            dual = jnp.where(first, 0.0,
+                             jnp.vdot(up, d) + 0.5 * rho * jnp.vdot(d, d))
+            return 0.5 * nu * jnp.vdot(r, r) + dual
+
+        def p_upd(p, W, z, qp, up, first):
+            g = jax.grad(phi_p)(p, W, z, qp, up, first)
+            tau = config.tau0
+            pn = p - g / tau
+            if p_grid is not None:
+                pn = p_grid.project(pn)
+            return pn
+
+        p_new = jax.vmap(p_upd, in_axes=(0, 0, 0, 0, 0, 0))(
+            st.p, st.W, st.z, q_prev, u_prev,
+            jnp.arange(L) == 0)
+        p = jnp.where(is_first, x0[None], p_new)
+
+        # ---- W-update: one local gradient step ------------------------------
+        def loss_w(W, p_, z_):
+            r = z_ - block_fn(W, p_)
+            return 0.5 * nu * jnp.vdot(r, r)
+
+        def w_upd(W, p_, z_):
+            g = jax.grad(loss_w)(W, p_, z_)
+            return jax.tree.map(lambda w, gw: w - lr_w * gw.astype(w.dtype), W, g)
+
+        W = jax.vmap(w_upd)(st.W, p, st.z)
+
+        # ---- z-update --------------------------------------------------------
+        Bz = jax.vmap(block_fn)(W, p)
+        z_hidden = (Bz + st.q + st.z) / 3.0
+
+        def fista_last(a, z_old):
+            step = 1.0 / (1.0 + nu)
+
+            def g_grad(z):
+                return jax.grad(risk_fn)(z) + nu * (z - a)
+
+            def body(i, carry):
+                z_prev, z_cur, t = carry
+                t_new = (1.0 + jnp.sqrt(1.0 + 4.0 * t * t)) / 2.0
+                y = z_cur + ((t - 1.0) / t_new) * (z_cur - z_prev)
+                return z_cur, y - step * g_grad(y), t_new
+
+            _, z_fin, _ = jax.lax.fori_loop(
+                0, fista_iters, body, (z_old, z_old - step * g_grad(z_old), 1.0))
+            return z_fin
+
+        z_last = fista_last(Bz[-1], st.z[-1])
+        z = jnp.where(is_last, z_last[None], z_hidden)
+
+        # ---- q / u -----------------------------------------------------------
+        p_next = jnp.concatenate([p[1:], p[-1:]], axis=0)  # last slot unused
+        q = (rho * p_next + st.u + nu * z) / (rho + nu)
+        if q_grid is not None:
+            q = q_grid.project(q)
+        q = jnp.where(is_last, st.q, q)
+        r = jnp.where(is_last, 0.0, p_next - q)
+        u = st.u + rho * r
+
+        new = BlockState(p, W, z, q, u)
+        obj = (risk_fn(z[-1])
+               + 0.5 * nu * jnp.sum(jnp.square(z - jax.vmap(block_fn)(W, p)))
+               + 0.5 * nu * jnp.sum(jnp.square(
+                   jnp.where(is_last, 0.0, q - z)))
+               + jnp.sum(u * r) + 0.5 * rho * jnp.sum(r * r))
+        return new, {"objective": obj, "residual": jnp.sqrt(jnp.sum(r * r))}
+
+    return iterate

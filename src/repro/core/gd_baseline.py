@@ -1,0 +1,72 @@
+"""Backpropagation baselines for GA-MLP (the paper's comparison methods):
+full-batch GD / Adadelta / Adagrad / Adam on the same model + data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optim as O
+
+
+def init_mlp(key, dims: Sequence[int]):
+    keys = jax.random.split(key, len(dims) - 1)
+    Ws = [jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+          * jnp.sqrt(2.0 / dims[i]) for i, k in enumerate(keys)]
+    bs = [jnp.zeros((dims[i + 1],), jnp.float32) for i in range(len(dims) - 1)]
+    return {"W": Ws, "b": bs}
+
+
+def mlp_logits(params, X):
+    h = X
+    L = len(params["W"])
+    for l in range(L - 1):
+        h = jnp.maximum(h @ params["W"][l] + params["b"][l], 0.0)
+    return h @ params["W"][L - 1] + params["b"][L - 1]
+
+
+def masked_ce(params, X, labels, mask):
+    logits = mlp_logits(params, X)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def accuracy(params, X, labels, mask):
+    pred = jnp.argmax(mlp_logits(params, X), axis=-1)
+    return jnp.sum((pred == labels) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+OPTIMIZERS = {
+    "gd": lambda lr: O.gd(lr),
+    "adadelta": lambda lr: O.adadelta(lr),
+    "adagrad": lambda lr: O.adagrad(lr),
+    "adam": lambda lr: O.adam(lr),
+}
+
+
+def train_gd(key, X, labels, masks, dims, method: str, lr: float,
+             epochs: int):
+    params = init_mlp(key, dims)
+    opt = OPTIMIZERS[method](lr)
+    state = opt.init(params)
+    grad_fn = jax.jit(jax.value_and_grad(
+        functools.partial(masked_ce)))
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(masked_ce)(params, X, labels,
+                                                    masks["train"])
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    hist = {"loss": []}
+    for _ in range(epochs):
+        params, state, loss = step(params, state)
+        hist["loss"].append(float(loss))
+    hist["val_acc"] = float(accuracy(params, X, labels, masks["val"]))
+    hist["test_acc"] = float(accuracy(params, X, labels, masks["test"]))
+    return params, hist

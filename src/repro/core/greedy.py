@@ -1,0 +1,82 @@
+"""Greedy layerwise training (paper Section III-B / V-F, strategy of [31]).
+
+Train a shallow GA-MLP, then insert more hidden layers before the output
+layer and continue — warm-starting every existing layer's (W, b) and
+re-initializing the split variables (p, z, q, u) by a forward pass so the
+grown state starts self-consistent (residual 0)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pdadmm
+from repro.core.pdadmm import ADMMConfig, ADMMState, relu
+
+
+def _grow(key, old: ADMMState, X, dims_new: Sequence[int],
+          config: ADMMConfig) -> ADMMState:
+    """Insert fresh hidden layers before the output layer; keep trained ones."""
+    L_old = len(old.W)
+    L_new = len(dims_new) - 1
+    n_insert = L_new - L_old
+    keys = jax.random.split(key, max(n_insert, 1))
+    W = [w for w in old.W[:-1]]
+    b = [x for x in old.b[:-1]]
+    h = dims_new[L_old - 1]
+    for i in range(n_insert):
+        # identity-insert (+tiny noise to break symmetry): inputs are
+        # post-ReLU (>= 0) so ReLU(I x) = x and the grown network starts as
+        # exactly the trained shallow function — no accuracy cliff at growth
+        W.append(jnp.eye(h, dtype=jnp.float32)
+                 + 1e-3 * jax.random.normal(keys[i], (h, h), jnp.float32))
+        b.append(jnp.zeros((h,), jnp.float32))
+    W.append(old.W[-1])
+    b.append(old.b[-1])
+
+    # forward-consistent re-init of (p, z, q, u)
+    p, z, q, u = [X], [], [], []
+    cur = X
+    for l in range(L_new):
+        zl = cur @ W[l] + b[l]
+        z.append(zl)
+        if l < L_new - 1:
+            ql = relu(zl)
+            if config.quantize_p and config.grid is not None:
+                ql = config.grid.project(ql)
+            q.append(ql)
+            p.append(ql)
+            u.append(jnp.zeros_like(ql))
+            cur = ql
+    tau = [jnp.asarray(config.tau0, jnp.float32)] * L_new
+    return ADMMState(p, W, b, z, q, u, tau, list(tau))
+
+
+def greedy_train(key, X, labels, masks, hidden: int, n_classes: int,
+                 schedule: Sequence[int], epochs_per_stage: int,
+                 config: ADMMConfig):
+    """schedule: layer counts, e.g. (2, 5, 10). Returns (state, history)."""
+    hist = {"objective": [], "residual": [], "stage_layers": [],
+            "val_acc": [], "test_acc": []}
+    state = None
+    k_grow, k_init = jax.random.split(key)
+    for si, L in enumerate(schedule):
+        dims = [X.shape[1]] + [hidden] * (L - 1) + [n_classes]
+        if state is None:
+            state = pdadmm.init_state(k_init, X, dims, config)
+        else:
+            k_grow, sub = jax.random.split(k_grow)
+            state = _grow(sub, state, X, dims, config)
+        import functools
+        step = jax.jit(functools.partial(pdadmm.iterate, config=config))
+        for _ in range(epochs_per_stage):
+            state, m = step(state, X, labels, masks["train"])
+            hist["objective"].append(float(m["objective"]))
+            hist["residual"].append(float(m["residual"]))
+            hist["stage_layers"].append(L)
+        hist["val_acc"].append(float(pdadmm.forward_accuracy(
+            state, X, labels, masks["val"])))
+        hist["test_acc"].append(float(pdadmm.forward_accuracy(
+            state, X, labels, masks["test"])))
+    return state, hist

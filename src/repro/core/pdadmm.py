@@ -1,0 +1,222 @@
+"""pdADMM-G / pdADMM-G-Q: the paper's Algorithm 1, single-host reference.
+
+All six variable families update *in parallel across layers* — each layer's
+update reads only previous-iteration values of its neighbors (that is what
+makes the algorithm model-parallel; the distributed runtime in
+``parallel/stage_parallel.py`` runs the same math with layers sharded over
+mesh stages and neighbor exchange on ICI).
+
+Variable layout (0-based, node-major):
+  p[l] : [V, dims[l]]     layer input,  l = 0..L-1, p[0] = X (never updated)
+  W[l] : [dims[l], dims[l+1]]
+  b[l] : [dims[l+1]]
+  z[l] : [V, dims[l+1]]
+  q[l] : [V, dims[l+1]]   layer output, l = 0..L-2
+  u[l] : [V, dims[l+1]]   dual,         l = 0..L-2
+  constraint: p[l+1] = q[l]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import subproblems as sp
+from repro.core.quantize import QuantGrid
+
+
+class ADMMState(NamedTuple):
+    p: List[jax.Array]
+    W: List[jax.Array]
+    b: List[jax.Array]
+    z: List[jax.Array]
+    q: List[jax.Array]
+    u: List[jax.Array]
+    tau: List[jax.Array]    # last accepted τ_l  (warm-started each iter)
+    theta: List[jax.Array]  # last accepted θ_l
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMConfig:
+    nu: float = 1e-2
+    rho: float = 1.0
+    fista_iters: int = 15
+    tau0: float = 1.0
+    backtrack_decay: float = 0.5   # warm start: next τ0 = τ_used * decay
+    quantize_p: bool = False
+    quantize_q: bool = False
+    grid: Optional[QuantGrid] = None
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def init_state(key, X, dims: Sequence[int], config: ADMMConfig) -> ADMMState:
+    """dims: [n_0, n_1, ..., n_L] (n_0 = K*d input width, n_L = #classes).
+    Initialization follows the paper's code: forward-propagate X through
+    random weights so (p, z, q) start self-consistent and residuals start 0."""
+    L = len(dims) - 1
+    V = X.shape[0]
+    keys = jax.random.split(key, L)
+    W, b, z, q, p, u = [], [], [], [], [X], []
+    cur = X
+    for l in range(L):
+        Wl = jax.random.normal(keys[l], (dims[l], dims[l + 1]), jnp.float32) \
+            * jnp.sqrt(2.0 / dims[l])
+        bl = jnp.zeros((dims[l + 1],), jnp.float32)
+        zl = cur @ Wl + bl
+        W.append(Wl)
+        b.append(bl)
+        z.append(zl)
+        if l < L - 1:
+            ql = relu(zl)
+            if config.quantize_p and config.grid is not None:
+                ql = config.grid.project(ql)
+            q.append(ql)
+            p.append(ql)
+            u.append(jnp.zeros_like(ql))
+            cur = ql
+    tau = [jnp.asarray(config.tau0, jnp.float32) for _ in range(L)]
+    theta = [jnp.asarray(config.tau0, jnp.float32) for _ in range(L)]
+    return ADMMState(p, W, b, z, q, u, tau, theta)
+
+
+def iterate(state: ADMMState, X, labels, label_mask,
+            config: ADMMConfig) -> tuple:
+    """One full Algorithm-1 iteration. Returns (new_state, metrics dict).
+
+    NOTE the k/k+1 bookkeeping: within an iteration the updates are
+    sequential across *variable families* (p then W then b then z then q
+    then u) but parallel across layers within each family.
+    """
+    nu, rho = config.nu, config.rho
+    p_grid = config.grid if config.quantize_p else None
+    q_grid = config.grid if config.quantize_q else None
+    L = len(state.W)
+
+    p, W, b, z, q, u = (list(state.p), list(state.W), list(state.b),
+                        list(state.z), list(state.q), list(state.u))
+    tau, theta = list(state.tau), list(state.theta)
+
+    # ---- p-updates (l = 1..L-1), parallel across layers -----------------
+    for l in range(1, L):
+        p[l], tau[l] = sp.update_p(
+            p[l], W[l], b[l], z[l], q[l - 1], u[l - 1], nu, rho,
+            tau[l] * config.backtrack_decay + 1e-6, grid=p_grid)
+
+    # ---- W-updates -------------------------------------------------------
+    for l in range(L):
+        qp = q[l - 1] if l > 0 else None
+        up = u[l - 1] if l > 0 else None
+        W[l], theta[l] = sp.update_W(
+            p[l], W[l], b[l], z[l], qp, up, nu, rho,
+            theta[l] * config.backtrack_decay + 1e-6, first=(l == 0))
+
+    # ---- b-updates (exact) ------------------------------------------------
+    for l in range(L):
+        b[l] = sp.update_b(p[l], W[l], z[l])
+
+    # ---- z-updates ---------------------------------------------------------
+    for l in range(L - 1):
+        a = sp.linear(p[l], W[l], b[l])
+        z[l] = sp.update_z_hidden(a, q[l], z[l], nu)
+    aL = sp.linear(p[L - 1], W[L - 1], b[L - 1])
+    z[L - 1] = sp.update_z_last(aL, z[L - 1], labels, label_mask, nu,
+                                config.fista_iters)
+
+    # ---- q-updates ----------------------------------------------------------
+    for l in range(L - 1):
+        q[l] = sp.update_q(p[l + 1], u[l], relu(z[l]), nu, rho, grid=q_grid)
+
+    # ---- dual updates + residuals --------------------------------------------
+    res_sq = jnp.float32(0.0)
+    for l in range(L - 1):
+        u[l], r = sp.update_u(u[l], p[l + 1], q[l], rho)
+        res_sq = res_sq + jnp.vdot(r, r)
+
+    new = ADMMState(p, W, b, z, q, u, tau, theta)
+    metrics = {
+        "objective": lagrangian(new, labels, label_mask, config),
+        "residual": jnp.sqrt(res_sq),
+    }
+    return new, metrics
+
+
+def lagrangian(s: ADMMState, labels, label_mask, config: ADMMConfig):
+    """L_ρ (Section III-B)."""
+    nu, rho = config.nu, config.rho
+    L = len(s.W)
+    val, _ = sp.ce_value_grad(s.z[L - 1], labels, label_mask)
+    for l in range(L):
+        r = s.z[l] - sp.linear(s.p[l], s.W[l], s.b[l])
+        val = val + 0.5 * nu * jnp.vdot(r, r)
+    for l in range(L - 1):
+        g = s.q[l] - relu(s.z[l])
+        val = val + 0.5 * nu * jnp.vdot(g, g)
+        d = s.p[l + 1] - s.q[l]
+        val = val + jnp.vdot(s.u[l], d) + 0.5 * rho * jnp.vdot(d, d)
+    return val
+
+
+def forward_accuracy(s: ADMMState, X, labels, mask) -> jax.Array:
+    """Inference accuracy of the trained MLP (standard forward pass)."""
+    h = X
+    L = len(s.W)
+    for l in range(L - 1):
+        h = relu(h @ s.W[l] + s.b[l])
+    logits = h @ s.W[L - 1] + s.b[L - 1]
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == labels) * mask)
+    return correct / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def comm_bytes_per_iteration(dims: Sequence[int], V: int,
+                             config: ADMMConfig) -> float:
+    """Exact wire bytes per iteration between layer clients (Fig 5 model).
+
+    Boundary l<->l+1 moves: q_l forward, u_l forward, p_{l+1} backward.
+    fp32 = 4 bytes; quantized tensors move at grid.bytes_per_element.
+    """
+    bp = config.grid.bytes_per_element if (config.quantize_p and config.grid) else 4.0
+    bq = config.grid.bytes_per_element if (config.quantize_q and config.grid) else 4.0
+    total = 0.0
+    for l in range(len(dims) - 2):
+        n = dims[l + 1]
+        total += V * n * (bq + 4.0 + bp)   # q fwd, u fwd (fp32), p bwd
+    return total
+
+
+def calibrate_grid(key, X, dims, bits: int, margin_frac: float = 0.05):
+    """Fit a b-bit uniform grid to this model's activation range (sampled at
+    a forward-consistent init) — the analogue of the paper choosing
+    Δ = {-1..20} to cover ITS activations."""
+    from repro.core.quantize import calibrated_grid
+    state = init_state(key, X, dims, ADMMConfig())
+    vals = jnp.concatenate([q.ravel()[:20_000] for q in state.q] or
+                           [X.ravel()[:20_000]])
+    lo, hi = float(jnp.min(vals)), float(jnp.max(vals))
+    margin = (hi - lo) * margin_frac
+    from repro.core.quantize import uniform_grid
+    return uniform_grid(bits, lo - margin, hi + margin)
+
+
+def train(key, X, labels, masks, dims, config: ADMMConfig, epochs: int,
+          *, jit: bool = True, callback=None):
+    """Run `epochs` iterations; returns (state, history dict of arrays)."""
+    state = init_state(key, X, dims, config)
+    step = jax.jit(functools.partial(iterate, config=config)) if jit \
+        else functools.partial(iterate, config=config)
+    hist = {"objective": [], "residual": [], "val_acc": [], "test_acc": []}
+    for e in range(epochs):
+        state, m = step(state, X, labels, masks["train"])
+        hist["objective"].append(float(m["objective"]))
+        hist["residual"].append(float(m["residual"]))
+        if callback is not None:
+            callback(e, state, m)
+    hist["val_acc"].append(float(forward_accuracy(state, X, labels, masks["val"])))
+    hist["test_acc"].append(float(forward_accuracy(state, X, labels, masks["test"])))
+    return state, hist

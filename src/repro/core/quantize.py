@@ -1,0 +1,97 @@
+"""Quantization for pdADMM-G-Q (Problem 3) and quantized collectives.
+
+Two grid families, both from the paper's Section V:
+  * the explicit integer set Δ = {-1, 0, 1, ..., 20} (default experiments),
+  * uniform b-bit grids over a calibrated range (the 8/16-bit cases of Fig 5).
+
+``project`` is the prox of the indicator I(p ∈ Δ) — the only change the
+Q-variant makes to the p-subproblem. ``encode``/``decode`` model the wire
+format (integer codes of ceil(log2 m) bits) for communication accounting and
+for the quantized collective payloads of the distributed runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantGrid:
+    lo: float
+    step: float
+    n_levels: int
+
+    @property
+    def hi(self) -> float:
+        return self.lo + self.step * (self.n_levels - 1)
+
+    @property
+    def bits(self) -> int:
+        return max(1, math.ceil(math.log2(self.n_levels)))
+
+    @property
+    def bytes_per_element(self) -> float:
+        return self.bits / 8.0
+
+    # -- core ops ---------------------------------------------------------
+    def index(self, x):
+        ix = jnp.round((x - self.lo) / self.step)
+        return jnp.clip(ix, 0, self.n_levels - 1)
+
+    def project(self, x):
+        """Nearest grid point (prox of the indicator)."""
+        return (self.lo + self.index(x) * self.step).astype(x.dtype)
+
+    def encode(self, x):
+        """x -> integer codes (the transmitted payload)."""
+        dtype = jnp.uint8 if self.bits <= 8 else jnp.uint16
+        return self.index(x).astype(dtype)
+
+    def decode(self, codes, dtype=jnp.float32):
+        return (self.lo + codes.astype(jnp.float32) * self.step).astype(dtype)
+
+
+def integer_grid(lo: int = -1, hi: int = 20) -> QuantGrid:
+    """The paper's default Δ = {-1, 0, ..., 20}."""
+    return QuantGrid(float(lo), 1.0, hi - lo + 1)
+
+
+def uniform_grid(bits: int, lo: float, hi: float) -> QuantGrid:
+    n = 2 ** bits
+    step = (hi - lo) / (n - 1) if hi > lo else 1.0
+    return QuantGrid(float(lo), float(step), n)
+
+
+def calibrated_grid(bits: int, x, margin: float = 0.0) -> QuantGrid:
+    lo = float(jnp.min(x)) - margin
+    hi = float(jnp.max(x)) + margin
+    return uniform_grid(bits, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic-rounding affine int8 codec for quantized collectives
+# (beyond-paper: the paper's trick applied to DP gradient all-reduce)
+# ---------------------------------------------------------------------------
+
+def affine_encode(x, bits: int = 8, axis=None, key: Optional[jax.Array] = None):
+    """Per-tensor (or per-`axis`) affine quantization. Returns (codes, scale, zero)."""
+    lo = jnp.min(x, axis=axis, keepdims=axis is not None)
+    hi = jnp.max(x, axis=axis, keepdims=axis is not None)
+    n = 2 ** bits - 1
+    scale = jnp.maximum((hi - lo) / n, 1e-12)
+    q = (x - lo) / scale
+    if key is not None:  # stochastic rounding (unbiased)
+        q = jnp.floor(q + jax.random.uniform(key, q.shape))
+    else:
+        q = jnp.round(q)
+    codes = jnp.clip(q, 0, n).astype(jnp.uint8 if bits <= 8 else jnp.uint16)
+    return codes, scale, lo
+
+
+def affine_decode(codes, scale, zero, dtype=jnp.float32):
+    return (codes.astype(jnp.float32) * scale + zero).astype(dtype)

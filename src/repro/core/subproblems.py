@@ -1,0 +1,180 @@
+"""The six pdADMM-G subproblem solvers (Appendix A/B of the paper).
+
+Layout convention: node-major. p_l, q_l, z_l, u_l are [V, n] (V = #nodes),
+W_l is [n_in, n_out], b_l is [n_out]. The linear map is z = p @ W + b.
+(The paper writes the transposed layout; the math is identical.)
+
+Every solver is a pure jit-able function of single-layer tensors, shared by
+the single-host reference loop (`pdadmm.py`), the stage-parallel shard_map
+runtime (`stage_parallel.py`), and the Pallas-accelerated path (`kernels/`).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantGrid
+
+
+def linear(p, W, b):
+    return p @ W + b
+
+
+def phi_first(p, W, b, z, nu):
+    """φ(p_1, W_1, b_1, z_1) = (ν/2)||z - Wp - b||² (first layer: p = X fixed)."""
+    r = z - linear(p, W, b)
+    return 0.5 * nu * jnp.vdot(r, r)
+
+
+def phi(p, W, b, z, q_prev, u_prev, nu, rho):
+    """φ(p_l, W_l, b_l, z_l, q_{l-1}, u_{l-1}) for l >= 2."""
+    r = z - linear(p, W, b)
+    d = p - q_prev
+    return (0.5 * nu * jnp.vdot(r, r) + jnp.vdot(u_prev, d)
+            + 0.5 * rho * jnp.vdot(d, d))
+
+
+def grad_p(p, W, b, z, q_prev, u_prev, nu, rho):
+    """∇_p φ = -ν (z - pW - b) Wᵀ + u + ρ(p - q)."""
+    r = z - linear(p, W, b)
+    return -nu * (r @ W.T) + u_prev + rho * (p - q_prev)
+
+
+def grad_W(p, W, b, z, nu):
+    """∇_W φ = -ν pᵀ (z - pW - b)."""
+    r = z - linear(p, W, b)
+    return -nu * (p.T @ r)
+
+
+# ---------------------------------------------------------------------------
+# Backtracking quadratic-approximation steps (p- and W-updates)
+# ---------------------------------------------------------------------------
+
+def _backtrack(x0, g, phi_at, phi0, t0, *, grid: Optional[QuantGrid],
+               max_doublings: int = 12):
+    """Find τ = t0·2^j s.t. φ(x⁺) <= U(x⁺;τ) = φ(x0) + gᵀ(x⁺-x0) + τ/2||x⁺-x0||².
+
+    x⁺ = proj(x0 - g/τ) (projection only in the quantized variant).
+    Runs as a lax.while_loop — jit-safe, bounded.
+    """
+    def step(t):
+        x = x0 - g / t
+        if grid is not None:
+            x = grid.project(x)
+        return x
+
+    def cond(state):
+        t, j = state
+        x = step(t)
+        d = x - x0
+        u_val = phi0 + jnp.vdot(g, d) + 0.5 * t * jnp.vdot(d, d)
+        return jnp.logical_and(phi_at(x) > u_val + 1e-6 * jnp.abs(u_val),
+                               j < max_doublings)
+
+    def body(state):
+        t, j = state
+        return t * 2.0, j + 1
+
+    t_final, _ = jax.lax.while_loop(cond, body, (jnp.asarray(t0, jnp.float32),
+                                                 jnp.asarray(0, jnp.int32)))
+    return step(t_final), t_final
+
+
+def update_p(p, W, b, z, q_prev, u_prev, nu, rho, tau0,
+             grid: Optional[QuantGrid] = None):
+    """p-subproblem (Eq. 3 / Eq. 10). Returns (p_new, tau_used)."""
+    g = grad_p(p, W, b, z, q_prev, u_prev, nu, rho)
+    phi0 = phi(p, W, b, z, q_prev, u_prev, nu, rho)
+    phi_at = lambda x: phi(x, W, b, z, q_prev, u_prev, nu, rho)
+    return _backtrack(p, g, phi_at, phi0, tau0, grid=grid)
+
+
+def update_W(p, W, b, z, q_prev, u_prev, nu, rho, theta0, *, first: bool):
+    """W-subproblem (Eq. 4). Returns (W_new, theta_used)."""
+    g = grad_W(p, W, b, z, nu)
+    if first:
+        phi0 = phi_first(p, W, b, z, nu)
+        phi_at = lambda Wx: phi_first(p, Wx, b, z, nu)
+    else:
+        phi0 = phi(p, W, b, z, q_prev, u_prev, nu, rho)
+        phi_at = lambda Wx: phi(p, Wx, b, z, q_prev, u_prev, nu, rho)
+    return _backtrack(W, g, phi_at, phi0, theta0, grid=None)
+
+
+def update_b(p, W, z):
+    """Exact minimizer of (ν/2)||z - pW - b||² over b: column mean of (z - pW).
+
+    (The paper takes a 1/ν gradient step; the exact solve satisfies the same
+    descent inequality — see DESIGN.md §7.)
+    """
+    return jnp.mean(z - p @ W, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# z-updates
+# ---------------------------------------------------------------------------
+
+def update_z_hidden(a, q, z_old, nu):
+    """Closed-form ReLU solution of Eq. (6):
+       min_z (ν/2)[(z-a)² + (q-relu(z))² + (z-z_old)²]  — elementwise.
+    Branch z<=0: z = min((a+z_old)/2, 0); branch z>=0: z = max((a+q+z_old)/3, 0);
+    pick the branch with the lower objective value.
+    """
+    zn = jnp.minimum((a + z_old) / 2.0, 0.0)
+    zp = jnp.maximum((a + q + z_old) / 3.0, 0.0)
+
+    def obj(zz):
+        return ((zz - a) ** 2 + (q - jnp.maximum(zz, 0.0)) ** 2
+                + (zz - z_old) ** 2)
+
+    return jnp.where(obj(zn) <= obj(zp), zn, zp)
+
+
+def ce_value_grad(z, labels, label_mask):
+    """Summed softmax cross-entropy over labeled nodes. z: [V, C]."""
+    logp = jax.nn.log_softmax(z, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    val = jnp.sum(nll * label_mask)
+    grad = (jax.nn.softmax(z, axis=-1)
+            - jax.nn.one_hot(labels, z.shape[-1])) * label_mask[:, None]
+    return val, grad
+
+
+def update_z_last(a, z_old, labels, label_mask, nu, n_iters: int = 15):
+    """FISTA for min_z R(z;y) + (ν/2)||z - a||² (Eq. 7). R = summed CE.
+
+    ∇R is 1-Lipschitz (softmax Jacobian ≼ I), so step = 1/(1+ν).
+    """
+    step = 1.0 / (1.0 + nu)
+
+    def g_grad(z):
+        _, gr = ce_value_grad(z, labels, label_mask)
+        return gr + nu * (z - a)
+
+    def body2(i, carry):
+        z_prev, z_cur, t = carry
+        t_new = (1.0 + jnp.sqrt(1.0 + 4.0 * t * t)) / 2.0
+        y = z_cur + ((t - 1.0) / t_new) * (z_cur - z_prev)
+        z_next = y - step * g_grad(y)
+        return z_cur, z_next, t_new
+
+    z0 = z_old
+    _, z_fin, _ = jax.lax.fori_loop(0, n_iters, body2,
+                                    (z0, z0 - step * g_grad(z0), 1.0))
+    return z_fin
+
+
+def update_q(p_next, u, fz, nu, rho, grid: Optional[QuantGrid] = None):
+    """Closed form (Eq. 8): q = (ρ p_{l+1} + u_l + ν f(z_l)) / (ρ+ν).
+    Optional projection = the paper's p&q-quantized variant (Appendix B)."""
+    q = (rho * p_next + u + nu * fz) / (rho + nu)
+    return grid.project(q) if grid is not None else q
+
+
+def update_u(u, p_next, q, rho):
+    """Dual ascent (Eq. 9): u += ρ (p_{l+1} - q_l). Returns (u_new, residual)."""
+    r = p_next - q
+    return u + rho * r, r

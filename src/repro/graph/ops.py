@@ -1,0 +1,70 @@
+"""Sparse graph operations: COO adjacency, renormalization, multi-hop
+feature augmentation Ψ = {I, Ã, Ã², Ã³} (the GA-MLP preprocessing step).
+
+SpMM is a gather + segment-sum over edges — executed ONCE per dataset; this
+is precisely the paper's point: after augmentation, training touches no graph
+structure, enabling layer/model parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    """COO, with symmetrized + self-looped renormalized weights precomputed."""
+    n_nodes: int
+    src: jax.Array        # [E] int32
+    dst: jax.Array        # [E] int32
+    weight: jax.Array     # [E] float32 — renormalized Ã entries
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+
+def renormalized_adjacency(n: int, src, dst) -> Graph:
+    """Ã = (D+I)^{-1/2} (A+I) (D+I)^{-1/2}  (Kipf-Welling renormalization).
+
+    Input edges are directed pairs; we symmetrize and add self loops.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    # symmetrize + self loops, dedup
+    s = np.concatenate([src, dst, np.arange(n)])
+    d = np.concatenate([dst, src, np.arange(n)])
+    key = s * n + d
+    _, idx = np.unique(key, return_index=True)
+    s, d = s[idx], d[idx]
+    deg = np.bincount(s, minlength=n).astype(np.float64)  # includes self loop
+    dinv = 1.0 / np.sqrt(deg)
+    w = dinv[s] * dinv[d]
+    return Graph(n, jnp.asarray(s, jnp.int32), jnp.asarray(d, jnp.int32),
+                 jnp.asarray(w, jnp.float32))
+
+
+def spmm(g: Graph, h):
+    """Ã @ h via edge gather + segment-sum. h: [V, d] -> [V, d]."""
+    msgs = h[g.src] * g.weight[:, None]
+    return jax.ops.segment_sum(msgs, g.dst, num_segments=g.n_nodes)
+
+
+def augment_features(g: Graph, H, k_hops: int):
+    """X = [H ψ_0 ; H ψ_1 ; ...] stacked on the feature axis.
+    ψ_i = Ã^i, ψ_0 = I. H: [V, d] -> X: [V, k*d]."""
+    feats = [H]
+    cur = H
+    for _ in range(k_hops - 1):
+        cur = spmm(g, cur)
+        feats.append(cur)
+    return jnp.concatenate(feats, axis=-1)
+
+
+def row_normalize(H):
+    s = jnp.sum(jnp.abs(H), axis=-1, keepdims=True)
+    return H / jnp.maximum(s, 1e-9)

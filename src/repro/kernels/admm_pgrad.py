@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: the p-subproblem gradient with fused ADMM epilogue.
+
+    g = -ν (r @ Wᵀ) + u + ρ (p - q)        (r = z - pW - b from fused_linear)
+
+The epilogue (+u, +ρ(p−q), scale −ν) rides in the matmul's final K step, so
+g's inputs u/p/q are each read once and no intermediate is written to HBM —
+this is the kernel-level half of the paper's communication thesis: keep
+per-layer updates local and cheap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def admm_pgrad(r, W, u, p, q, *, nu: float, rho: float,
+               bm: int = 256, bk: int = 256, bn: int = 256,
+               interpret: bool = False):
+    """r: [V, n_out]; W: [n_in, n_out]; u,p,q: [V, n_in] -> g: [V, n_in].
+
+    Contracts r with Wᵀ: we pass W and index it transposed via the BlockSpec
+    (block (bn, bk) at (n, k) of W == block (bk, bn) of Wᵀ) and transpose the
+    tile in-register.
+    """
+    V, n_out = r.shape
+    n_in = W.shape[0]
+    assert W.shape == (n_in, n_out) and u.shape == (V, n_in)
+    bm, bk, bn = min(bm, V), min(bk, n_out), min(bn, n_in)
+    assert V % bm == 0 and n_out % bk == 0 and n_in % bn == 0
+    n_k = n_out // bk
+
+    def kernel(r_ref, w_ref, u_ref, p_ref, q_ref, out_ref, acc_ref):
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(r_ref[...], w_ref[...].T,
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(k == n_k - 1)
+        def _epilogue():
+            g = (-nu) * acc_ref[...] \
+                + u_ref[...].astype(jnp.float32) \
+                + rho * (p_ref[...].astype(jnp.float32)
+                         - q_ref[...].astype(jnp.float32))
+            out_ref[...] = g.astype(out_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(V // bm, n_in // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),   # r
+            pl.BlockSpec((bn, bk), lambda m, n, k: (n, k)),   # W rows=n_in
+            pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),   # u
+            pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),   # p
+            pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),   # q
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((V, n_in), p.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(r, W, u, p, q)

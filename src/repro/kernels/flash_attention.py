@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: causal flash attention (online softmax) for the LM
+prefill path — the compute hot-spot of the prefill_32k cells.
+
+Grid: (batch*heads, Sq/bq); the KV loop runs inside the kernel with running
+(max, denom) statistics in VMEM, so the [Sq, T] score matrix never exists in
+HBM. Causal blocks beyond the diagonal are skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  seq_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale            # [bq, d]
+    m = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq, 1), jnp.float32)
+    acc = jnp.zeros((bq, q.shape[-1]), jnp.float32)
+    n_kb = seq_k // bk
+    # causal: only blocks with k_start <= q_end
+    max_kb = jnp.minimum(((qi + 1) * bq + bk - 1) // bk, n_kb) if causal else n_kb
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * bk, bk), slice(None))
+                    ).astype(jnp.float32)                  # [bk, d]
+        v = pl.load(v_ref, (pl.dslice(kb * bk, bk), slice(None))
+                    ).astype(jnp.float32)
+        s = q @ k.T                                        # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, max_kb, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 256, interpret: bool = False):
+    """q: [B, H, Sq, D]; k, v: [B, H, T, D] (kv already GQA-expanded).
+    Returns [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    T = k.shape[2]
+    bq_, bk_ = min(bq, Sq), min(bk, T)
+    if Sq % bq_ or T % bk_:
+        bq_, bk_ = Sq, T
+    scale = D ** -0.5
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, T, D)
+    vf = v.reshape(B * H, T, D)
+
+    kernel = functools.partial(_flash_kernel, bq=bq_, bk=bk_, seq_k=T,
+                               causal=causal, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq_),
+        in_specs=[
+            pl.BlockSpec((None, bq_, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, T, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, T, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq_, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

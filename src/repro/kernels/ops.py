@@ -1,0 +1,78 @@
+"""Jit'd dispatch layer for the Pallas kernels.
+
+``use_pallas`` selects the kernel path; on a CPU host the kernels run in
+interpret mode (the dry-run and the distributed step always lower the jnp
+path — a CPU can't lower TPU Pallas). On a real TPU runtime set
+``interpret=False`` (default when a TPU backend is detected).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (admm_pgrad as _pg, flash_attention as _fa,
+                           fused_linear as _fl, quantize_kernel as _qk,
+                           ref, relu_zupdate as _zu)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "use_pallas", "interpret"))
+def fused_linear(p, W, b, z=None, *, mode="linear", use_pallas=True,
+                 interpret=None):
+    if not use_pallas:
+        return ref.fused_linear_ref(p, W, b, z, mode=mode)
+    it = _default_interpret() if interpret is None else interpret
+    return _fl.fused_linear(p, W, b, z, mode=mode, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "rho", "use_pallas",
+                                             "interpret"))
+def admm_pgrad(r, W, u, p, q, *, nu, rho, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.admm_pgrad_ref(r, W, u, p, q, nu=nu, rho=rho)
+    it = _default_interpret() if interpret is None else interpret
+    return _pg.admm_pgrad(r, W, u, p, q, nu=nu, rho=rho, interpret=it)
+
+
+def grid_project(x, grid, *, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.grid_project_ref(x, grid)
+    it = _default_interpret() if interpret is None else interpret
+    return _qk.grid_project(x, grid, interpret=it)
+
+
+def grid_encode(x, grid, *, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.grid_encode_ref(x, grid)
+    it = _default_interpret() if interpret is None else interpret
+    return _qk.grid_encode(x, grid, interpret=it)
+
+
+def grid_decode(codes, grid, out_dtype=jnp.float32, *, use_pallas=True,
+                interpret=None):
+    if not use_pallas:
+        return ref.grid_decode_ref(codes, grid, out_dtype)
+    it = _default_interpret() if interpret is None else interpret
+    return _qk.grid_decode(codes, grid, out_dtype, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def relu_zupdate(a, q, z_old, *, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.relu_zupdate_ref(a, q, z_old)
+    it = _default_interpret() if interpret is None else interpret
+    return _zu.relu_zupdate(a, q, z_old, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    it = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, interpret=it)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth the
+per-kernel shape/dtype sweeps assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear_ref(p, W, b, z=None, *, mode: str = "linear"):
+    out = (p.astype(jnp.float32) @ W.astype(jnp.float32)
+           + b.astype(jnp.float32))
+    if mode == "residual":
+        out = z.astype(jnp.float32) - out
+    return out.astype(p.dtype)
+
+
+def admm_pgrad_ref(r, W, u, p, q, *, nu: float, rho: float):
+    g = (-nu) * (r.astype(jnp.float32) @ W.astype(jnp.float32).T) \
+        + u.astype(jnp.float32) \
+        + rho * (p.astype(jnp.float32) - q.astype(jnp.float32))
+    return g.astype(p.dtype)
+
+
+def grid_project_ref(x, grid):
+    return grid.project(x)
+
+
+def grid_encode_ref(x, grid):
+    return grid.encode(x)
+
+
+def grid_decode_ref(codes, grid, out_dtype=jnp.float32):
+    return grid.decode(codes, out_dtype)
+
+
+def relu_zupdate_ref(a, q, z_old):
+    from repro.core.subproblems import update_z_hidden
+    return update_z_hidden(a.astype(jnp.float32), q.astype(jnp.float32),
+                           z_old.astype(jnp.float32), 1.0).astype(a.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: [B,H,S,D]; k,v: [B,H,T,D]."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    if causal:
+        Sq, T = q.shape[2], k.shape[2]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (jax locks device count at first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost/collective stats for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_mod
+from repro.configs.base import (ALL_SHAPES, ARCH_IDS, SHAPES_BY_NAME,
+                                arch_shape_cells, get_arch)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step, to_named)
+from repro.models.api import build
+from repro.parallel import sharding as sh
+from repro.train import optim
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool, *,
+               moe_impl: str = "einsum", attn_chunk: int = 256,
+               fsdp=None, donate: bool = True, microbatches=None):
+    """Build + lower + compile one cell; return (compiled, meta dict)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_arch(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    bundle = build(cfg, mesh, shape, moe_impl=moe_impl, attn_chunk=attn_chunk)
+    if fsdp is not None:
+        bundle.rules = sh.make_rules(mesh, cfg, shape, fsdp=fsdp)
+    mb = cfg.microbatches if microbatches is None else microbatches
+
+    params_sds = bundle.abstract_params()
+    p_ps = to_named(mesh, bundle.param_pspecs())
+    batch_sds = bundle.input_specs(shape)
+    in_b_ps = to_named(mesh, bundle.input_pspecs(shape))
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        import jax.numpy as jnp
+
+        from repro.train.trainer import make_accum_train_step
+        opt = optim.adamw8bit(3e-4) if cfg.opt_bits == 8 else optim.adamw(3e-4)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        o_ps = to_named(mesh, optim.make_opt_pspecs(
+            opt_sds, bundle.param_pspecs(), params_sds))
+        fn = make_accum_train_step(
+            bundle, opt, mb,
+            accum_dtype=jnp.bfloat16 if cfg.accum_bf16 else None)
+        jitted = jax.jit(fn, in_shardings=(p_ps, o_ps, in_b_ps),
+                         out_shardings=(p_ps, o_ps, rep),
+                         donate_argnums=(0, 1) if donate else ())
+        args = (params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(bundle, shape)
+        logit_ps = NamedSharding(mesh, sh.pspec(("batch", None, "vocab"),
+                                                bundle.rules))
+        jitted = jax.jit(fn, in_shardings=(p_ps, in_b_ps),
+                         out_shardings=None)
+        args = (params_sds, batch_sds)
+    else:  # decode
+        state_sds = bundle.serve_state_specs(shape)
+        st_ps = to_named(mesh, bundle.serve_state_pspecs(shape))
+        logit_ps = NamedSharding(mesh, sh.pspec(("batch", None, "vocab"),
+                                                bundle.rules))
+        fn = make_serve_step(bundle, shape)
+        jitted = jax.jit(fn, in_shardings=(p_ps, st_ps, in_b_ps),
+                         out_shardings=(logit_ps, st_ps),
+                         donate_argnums=(1,) if donate else ())
+        args = (params_sds, state_sds, batch_sds)
+
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    meta = {"lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+            "n_devices": mesh.size, "mesh": dict(mesh.shape),
+            "n_params": bundle.n_params()}
+    return compiled, meta
+
+
+def cell_stats(compiled, meta, n_devices: int) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    stats = dict(meta)
+    # XLA's cost analysis counts while bodies ONCE (layer scans undercounted);
+    # keep for reference, use the loop-corrected HLO walk as the real number.
+    stats["xla_flops_per_device"] = float(ca.get("flops", 0.0))
+    stats["xla_bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        stats["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_live_bytes": (ma.argument_size_in_bytes
+                                + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes
+                                - ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        stats["memory"] = {"error": str(e)}
+    txt = compiled.as_text()
+    stats["hlo_chars"] = len(txt)
+    h = hlo_mod.analyze(txt, n_devices)
+    stats["flops_per_device"] = h.flops
+    stats["hbm_bytes_per_device"] = h.hbm_bytes
+    stats["dot_bytes_per_device"] = h.dot_bytes
+    stats["collectives"] = h.coll_summary()
+    return stats
+
+
+def lower_admm_cell(multi_pod: bool, *, bits: int = 0, V: int = 1_048_576,
+                    h: int = 4096, L: int = 16, n_classes: int = 64):
+    """The paper's own technique at production scale: stage-parallel
+    pdADMM-G(-Q) on the full mesh. bits=0 -> fp32 wire; 8/16 -> quantized."""
+    import jax.numpy as jnp
+
+    from repro.core import quantize
+    from repro.core.pdadmm import ADMMConfig
+    from repro.parallel import stage_parallel as SP
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    grid = quantize.uniform_grid(bits, -2.0, 6.0) if bits else None
+    cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=bits > 0,
+                     quantize_q=bits > 0, grid=grid)
+    step, specs = SP.make_distributed_step(mesh, L, n_classes, cfg,
+                                           donate=True)
+    f32 = jnp.float32
+    st = SP.StackState(
+        p=jax.ShapeDtypeStruct((L, V, h), f32),
+        W=jax.ShapeDtypeStruct((L, h, h), f32),
+        b=jax.ShapeDtypeStruct((L, h), f32),
+        z=jax.ShapeDtypeStruct((L, V, h), f32),
+        q=jax.ShapeDtypeStruct((L, V, h), f32),
+        u=jax.ShapeDtypeStruct((L, V, h), f32))
+    args = (st, jax.ShapeDtypeStruct((V, h), f32),
+            jax.ShapeDtypeStruct((V,), jnp.int32),
+            jax.ShapeDtypeStruct((V,), f32))
+    t0 = time.time()
+    lowered = step.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    meta = {"lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+            "n_devices": mesh.size, "mesh": dict(mesh.shape),
+            "n_params": L * h * h, "V": V, "h": h, "L": L, "wire_bits": bits}
+    return compiled, meta
+
+
+def run_admm_cell(mesh_kind: str, bits: int, out_dir: Path, tag: str = ""):
+    multi = mesh_kind == "multi"
+    name = f"stage_v1m_b{bits or 32}{tag}"
+    print(f"[RUN ] gamlp-admm x {name} x {mesh_kind} ...", flush=True)
+    try:
+        compiled, meta = lower_admm_cell(multi, bits=bits)
+        stats = cell_stats(compiled, meta, 512 if multi else 256)
+        stats["status"] = "ok"
+        mem = stats.get("memory", {})
+        print(f"   ok: compile={stats['compile_s']}s "
+              f"flops/dev={stats['flops_per_device']:.3e} "
+              f"peak_bytes/dev={mem.get('peak_live_bytes', 0):.3e} "
+              f"coll_moved={stats['collectives']['total']['moved_bytes']:.3e}",
+              flush=True)
+    except Exception as e:
+        stats = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                 "traceback": traceback.format_exc()[-4000:]}
+        print(f"   ERROR: {stats['error']}", flush=True)
+    stats["arch"], stats["shape"], stats["mesh_kind"] = "gamlp-admm", name, mesh_kind
+    dest = out_dir / mesh_kind / "gamlp-admm"
+    dest.mkdir(parents=True, exist_ok=True)
+    (dest / f"{name}.json").write_text(json.dumps(stats, indent=1))
+    return stats
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, args) -> dict:
+    multi = mesh_kind == "multi"
+    try:
+        compiled, meta = lower_cell(
+            arch, shape, multi, moe_impl=args.moe_impl,
+            attn_chunk=args.attn_chunk, donate=not args.no_donate,
+            microbatches=args.microbatches)
+        stats = cell_stats(compiled, meta, 512 if multi else 256)
+        stats["status"] = "ok"
+    except Exception as e:
+        stats = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                 "traceback": traceback.format_exc()[-4000:]}
+    stats["arch"], stats["shape"], stats["mesh_kind"] = arch, shape, mesh_kind
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-impl", default="einsum", choices=["einsum", "gather"])
+    ap.add_argument("--attn-chunk", type=int, default=256)
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--admm", action="store_true",
+                    help="run the stage-parallel pdADMM-G production cells")
+    ap.add_argument("--admm-bits", type=int, default=None,
+                    help="wire bits for --admm (0=fp32, 8, 16); default: all")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(ART))
+    args = ap.parse_args()
+
+    archs = args.arch or (list(ARCH_IDS) if args.all else ["tinyllama-1.1b"])
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out_dir = Path(args.out)
+
+    if args.admm:
+        bit_list = [args.admm_bits] if args.admm_bits is not None else [0, 8]
+        for mk in mesh_kinds:
+            for bits in bit_list:
+                run_admm_cell(mk, bits, out_dir, args.tag)
+        return
+
+    for arch in archs:
+        cfg = get_arch(arch)
+        for shape, skip in arch_shape_cells(cfg):
+            if args.shape and shape.name not in args.shape:
+                continue
+            for mk in mesh_kinds:
+                dest = out_dir / mk / arch
+                dest.mkdir(parents=True, exist_ok=True)
+                fname = dest / f"{shape.name}{args.tag}.json"
+                if skip:
+                    rec = {"status": "skip", "reason": skip, "arch": arch,
+                           "shape": shape.name, "mesh_kind": mk}
+                    print(f"[SKIP] {arch} x {shape.name} x {mk}: {skip}")
+                else:
+                    print(f"[RUN ] {arch} x {shape.name} x {mk} ...", flush=True)
+                    rec = run_cell(arch, shape.name, mk, args)
+                    if rec["status"] == "ok":
+                        mem = rec.get("memory", {})
+                        print(f"   ok: compile={rec['compile_s']}s "
+                              f"flops/dev={rec['flops_per_device']:.3e} "
+                              f"peak_bytes/dev={mem.get('peak_live_bytes', 0):.3e} "
+                              f"coll_moved={rec['collectives']['total']['moved_bytes']:.3e}",
+                              flush=True)
+                    else:
+                        print(f"   ERROR: {rec['error']}", flush=True)
+                fname.write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — device count is locked at first jax init, and only
+``launch/dryrun.py`` is allowed to force 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes, devices=None):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(devices=None, model: int = 2):
+    """Small mesh over whatever devices exist (unit tests / smoke)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    model = min(model, n)
+    return _mk((n // model, model), ("data", "model"),
+               devices=devices[: (n // model) * model])
+
+
+def make_host_mesh():
+    """1x1 mesh on the single real device (CPU smoke tests)."""
+    return _mk((1, 1), ("data", "model"))

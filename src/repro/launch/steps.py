@@ -1,0 +1,60 @@
+"""Assemble jit-able train_step / serve_step for any (arch x shape) cell.
+
+These are the functions the multi-pod dry-run lowers and the trainer runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.api import ModelBundle, build
+from repro.parallel import sharding as sh
+from repro.train import optim
+
+
+def make_train_step(bundle: ModelBundle, opt: optim.Optimizer):
+    """(params, opt_state, batch) -> (params, opt_state, loss)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_serve_step(bundle: ModelBundle, shape: ShapeConfig):
+    """One decode step at a full cache (length = seq_len - 1)."""
+    length = shape.seq_len - 1
+
+    def serve_step(params, state, batch):
+        return bundle.serve_step(params, state, batch, length=length)
+
+    return serve_step
+
+
+def make_prefill_step(bundle: ModelBundle, shape: ShapeConfig):
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch, max_len=shape.seq_len)
+
+    return prefill_step
+
+
+def shardings_for_train(bundle: ModelBundle, opt: optim.Optimizer):
+    """(in_shardings, out_shardings) trees for jit(train_step)."""
+    mesh = bundle.mesh
+    p_ps = bundle.param_pspecs()
+    params_shape = bundle.abstract_params()
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    o_ps = optim.make_opt_pspecs(opt_shape, p_ps, params_shape)
+    in_ps = bundle.input_pspecs  # callable per shape
+    return p_ps, o_ps
+
+
+def to_named(mesh, tree):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree)

@@ -1,0 +1,55 @@
+"""Training launcher: any --arch at reduced (CPU) or full scale.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.api import build
+from repro.train import optim
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized smoke)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_lm")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh()
+        shape = ShapeConfig("train", args.seq_len or 128, args.batch or 4,
+                            "train")
+    else:
+        mesh = make_production_mesh()
+        shape = ShapeConfig("train", args.seq_len or 4096, args.batch or 256,
+                            "train")
+    bundle = build(cfg, mesh, shape)
+    pipe = TokenPipeline(cfg.vocab, shape.seq_len, shape.global_batch)
+    tc = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir,
+                       microbatches=args.microbatches or cfg.microbatches)
+    trainer = Trainer(bundle, optim.adamw(args.lr), pipe, tc)
+    trainer.run(jax.random.PRNGKey(0), mesh=mesh)
+    print(f"done: final loss {trainer.history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

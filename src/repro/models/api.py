@@ -1,0 +1,223 @@
+"""Unified model API: one entry point per (arch x shape) cell.
+
+``ModelBundle`` binds (cfg, mesh, rules) and exposes:
+  param_specs / abstract_params / init  — params as Specs / SDS / arrays
+  loss(params, batch)                   — training objective
+  serve_init_specs / serve_step         — decode path with KV/SSM state
+  input_specs(shape)                    — ShapeDtypeStructs for every input
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import common, jamba, layers, mamba2, transformer, whisper
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    mesh: Any
+    rules: sh.Rules
+    moe_impl: str = "einsum"
+    attn_chunk: int = 1024
+    dtype: Any = jnp.bfloat16
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        self.vocab_padded = sh.padded_vocab(self.cfg, self.mesh)
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            self._mod = transformer
+        elif fam == "ssm":
+            self._mod = mamba2
+        elif fam == "hybrid":
+            self._mod = jamba
+        elif fam == "audio":
+            self._mod = whisper
+        else:
+            raise ValueError(f"no LM model for family {fam!r}")
+
+    # -- params ---------------------------------------------------------
+    def param_specs(self):
+        return self._mod.param_specs(self.cfg, self.vocab_padded, self.dtype)
+
+    def abstract_params(self):
+        return common.abstract_params(self.param_specs())
+
+    def param_pspecs(self):
+        return common.param_pspecs(self.param_specs(), self.rules)
+
+    def init(self, key):
+        return common.init_params(self.param_specs(), key)
+
+    def n_params(self) -> int:
+        return common.count_params(self.param_specs())
+
+    # -- train ----------------------------------------------------------
+    def loss(self, params, batch):
+        if self.cfg.family == "audio":
+            hidden, aux = whisper.forward_hidden(
+                self.cfg, self.mesh, self.rules, params, batch,
+                attn_chunk=self.attn_chunk)
+            head = params["embed"].T
+        else:
+            hidden, aux = self._mod.forward_hidden(
+                self.cfg, self.mesh, self.rules, params, batch,
+                moe_impl=self.moe_impl, attn_chunk=self.attn_chunk)
+            head = transformer._head_weight(self.cfg, params)
+        mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+        ce = transformer.chunked_ce_loss(
+            self.cfg, self.mesh, self.rules, hidden, head,
+            batch["targets"], mask, self.cfg.vocab)
+        return ce + 0.01 * aux / max(self.cfg.n_layers, 1)
+
+    # -- serve ----------------------------------------------------------
+    def serve_state_shape(self, shape: ShapeConfig):
+        """Decode-state pytree as concrete-shaped zeros builder spec."""
+        cfg, B, T = self.cfg, shape.global_batch, shape.seq_len
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            cls = layers.KVCacheQ if cfg.kv_cache_bits == 8 else layers.KVCache
+            return cls.zeros(B, T, cfg.n_kv_heads, cfg.hd,
+                             self.dtype, layers=cfg.n_layers)
+        if fam == "ssm":
+            return mamba2.mixer_init_state(cfg, B, layers=cfg.n_layers,
+                                           dtype=self.dtype)
+        if fam == "hybrid":
+            return jamba.init_decode_state(cfg, B, T, self.dtype)
+        if fam == "audio":
+            return whisper.init_decode_state(cfg, B, T, self.dtype)
+        raise ValueError(fam)
+
+    def serve_state_specs(self, shape: ShapeConfig):
+        state = jax.eval_shape(lambda: self.serve_state_shape(shape))
+        return state
+
+    def serve_state_pspecs(self, shape: ShapeConfig):
+        cfg, r = self.cfg, self.rules
+        kv = sh.pspec(("layers", "batch", "kv_seq", "act_kv_heads", None), r)
+        kv_mha = sh.pspec(("layers", "batch", "kv_seq", "act_heads", None), r)
+        cross = sh.pspec(("layers", "batch", None, "act_heads", None), r)
+        scalar = sh.pspec((), r)
+
+        def ssm_pspecs():
+            return mamba2.SSMState(
+                sh.pspec(("layers", "batch", None, "ssm_inner"), r),
+                sh.pspec(("layers", "batch", None, None), r),
+                sh.pspec(("layers", "batch", None, None), r),
+                sh.pspec(("layers", "batch", "ssm_heads", None, None), r))
+
+        kv_scale = sh.pspec(("layers", "batch", "kv_seq", "act_kv_heads"), r)
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            if cfg.kv_cache_bits == 8:
+                return layers.KVCacheQ(kv, kv, kv_scale, kv_scale, scalar)
+            return layers.KVCache(kv, kv, scalar)
+        if fam == "ssm":
+            return ssm_pspecs()
+        if fam == "hybrid":
+            out = {}
+            for i, (mixer, _) in enumerate(jamba._positions(cfg)):
+                out[f"pos{i}"] = (kv, kv) if mixer == "attn" else tuple(ssm_pspecs())
+            return out
+        if fam == "audio":
+            return {"self_k": kv_mha, "self_v": kv_mha,
+                    "cross_k": cross, "cross_v": cross}
+        raise ValueError(fam)
+
+    def serve_step(self, params, state, batch, *, length):
+        cfg, mesh, rules = self.cfg, self.mesh, self.rules
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            if cfg.kv_cache_bits == 8:
+                cache = layers.KVCacheQ(state.k, state.v, state.k_scale,
+                                        state.v_scale, jnp.int32(length))
+            else:
+                cache = layers.KVCache(state.k, state.v, jnp.int32(length))
+            return transformer.decode_step(cfg, mesh, rules, params, cache,
+                                           batch, moe_impl=self.moe_impl)
+        if fam == "ssm":
+            return mamba2.decode_step(cfg, mesh, rules, params, state, batch)
+        if fam == "hybrid":
+            return jamba.decode_step(cfg, mesh, rules, params, state, batch,
+                                     length=jnp.int32(length),
+                                     moe_impl=self.moe_impl)
+        if fam == "audio":
+            return whisper.decode_step(cfg, mesh, rules, params, state, batch,
+                                       length=jnp.int32(length))
+        raise ValueError(fam)
+
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.prefill(cfg, self.mesh, self.rules, params,
+                                       batch, max_len, moe_impl=self.moe_impl,
+                                       attn_chunk=self.attn_chunk)
+        # For ssm/hybrid/audio, prefill = full forward producing final state;
+        # dry-run prefill cells use forward_hidden + head on last position.
+        hidden, _ = self._mod.forward_hidden(cfg, self.mesh, self.rules,
+                                             params, batch,
+                                             moe_impl=self.moe_impl,
+                                             attn_chunk=self.attn_chunk)
+        head = params["embed"].T if (cfg.tie_embeddings or cfg.family == "audio") \
+            else params["head"]
+        return (hidden[:, -1:] @ head).astype(jnp.float32), None
+
+    # -- inputs ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg, B, S = self.cfg, shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            d = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        elif shape.kind == "prefill":
+            d = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        else:  # decode
+            d = {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+        if cfg.family == "vlm":
+            ps = (B, S, 3) if shape.kind != "decode" else (B, 1, 3)
+            d["positions"] = jax.ShapeDtypeStruct(ps, i32)
+        if cfg.family == "audio" and shape.kind != "decode":
+            d["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                               self.dtype)
+        return d
+
+    def input_pspecs(self, shape: ShapeConfig):
+        specs = self.input_specs(shape)
+        out = {}
+        for k, v in specs.items():
+            if k in ("tokens", "targets", "token", "mask"):
+                out[k] = sh.pspec(("batch", "act_seq")[: len(v.shape)], self.rules)
+            elif k == "positions":
+                out[k] = sh.pspec(("batch", "act_seq", None), self.rules)
+            elif k == "frames":
+                out[k] = sh.pspec(("batch", "act_seq", "act_embed"), self.rules)
+        return out
+
+    def make_inputs(self, shape: ShapeConfig, key=None):
+        """Concrete small inputs (smoke tests on reduced configs)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        specs = self.input_specs(shape)
+        out = {}
+        for k, v in specs.items():
+            key, sub = jax.random.split(key)
+            if v.dtype == jnp.int32:
+                hi = self.cfg.vocab if k in ("tokens", "targets", "token") else 16
+                out[k] = jax.random.randint(sub, v.shape, 0, max(hi, 2), jnp.int32)
+            else:
+                out[k] = jax.random.normal(sub, v.shape, jnp.float32).astype(v.dtype)
+        return out
+
+
+def build(cfg: ArchConfig, mesh, shape: Optional[ShapeConfig] = None,
+          **kw) -> ModelBundle:
+    rules = sh.make_rules(mesh, cfg, shape)
+    return ModelBundle(cfg=cfg, mesh=mesh, rules=rules, **kw)

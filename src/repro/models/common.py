@@ -1,0 +1,75 @@
+"""Param-spec machinery shared by all models.
+
+A model is described by a pytree of :class:`Spec` leaves (shape + logical axes
++ init scale). From that single description we derive:
+  * materialized params        (``init_params`` — smoke tests / real training)
+  * ShapeDtypeStructs          (``abstract_params`` — dry-run, no allocation)
+  * PartitionSpecs/shardings   (``param_pspecs`` — pjit in/out shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import Rules, pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _init_one(spec: Spec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+    if spec.init == "small":
+        scale = 0.02
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_params(specs, key):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        specs, is_leaf=is_spec)
+
+
+def param_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_pspecs(specs, rules: Rules):
+    return jax.tree.map(lambda s: pspec(s.axes, rules), specs, is_leaf=is_spec)
+
+
+def param_bytes(specs) -> int:
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))

@@ -1,0 +1,194 @@
+"""Jamba (arXiv:2403.19887): hybrid Mamba+attention 1:7 interleave with MoE.
+
+Structure: period-8 blocks [M M M M A M M M] (attention at index 4), MoE
+replacing the MLP on every other layer (odd indices), dense SwiGLU otherwise.
+Params are stacked over *periods* ([n_periods, ...] leaves) and scanned; the
+8 heterogeneous sublayers are unrolled inside the scan body — HLO stays flat
+in total depth. Jamba uses no positional encodings (the Mamba layers carry
+position), so attention is NoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.common import Spec
+from repro.parallel.sharding import constrain
+
+
+def _attn_specs(cfg, n: int, dtype) -> dict:
+    d, hd, Hq, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    return {
+        "ln": Spec((n, d), ("layers", None), "ones", dtype=dtype),
+        "wq": Spec((n, d, Hq * hd), ("layers", "embed", "q_heads"), dtype=dtype),
+        "wk": Spec((n, d, Hkv * hd), ("layers", "embed", "kv_heads"), dtype=dtype),
+        "wv": Spec((n, d, Hkv * hd), ("layers", "embed", "kv_heads"), dtype=dtype),
+        "wo": Spec((n, Hq * hd, d), ("layers", "q_heads", "embed"), dtype=dtype),
+    }
+
+
+def _mlp_specs(cfg, n: int, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln": Spec((n, d), ("layers", None), "ones", dtype=dtype),
+        "w_gate": Spec((n, d, f), ("layers", "embed", "ffn"), dtype=dtype),
+        "w_up": Spec((n, d, f), ("layers", "embed", "ffn"), dtype=dtype),
+        "w_down": Spec((n, f, d), ("layers", "ffn", "embed"), dtype=dtype),
+    }
+
+
+def _moe_specs(cfg, n: int, dtype) -> dict:
+    d, E, f = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_ff_expert
+    return {
+        "ln": Spec((n, d), ("layers", None), "ones", dtype=dtype),
+        "w_router": Spec((n, d, E), ("layers", "embed", "experts"), "small",
+                         dtype=jnp.float32),
+        "w_gate_e": Spec((n, E, d, f), ("layers", "experts", "embed", "ffn_exp"), dtype=dtype),
+        "w_up_e": Spec((n, E, d, f), ("layers", "experts", "embed", "ffn_exp"), dtype=dtype),
+        "w_down_e": Spec((n, E, f, d), ("layers", "experts", "ffn_exp", "embed"), dtype=dtype),
+    }
+
+
+def _positions(cfg):
+    period, attn_i = cfg.hybrid_period, cfg.hybrid_attn_index
+    out = []
+    for i in range(period):
+        mixer = "attn" if i == attn_i else "mamba"
+        ffn = "moe" if (cfg.moe and i % cfg.moe.every == 1) else "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+def param_specs(cfg, vocab_padded: int, dtype=jnp.bfloat16) -> dict:
+    n_periods = cfg.n_layers // cfg.hybrid_period
+    blocks = {}
+    for i, (mixer, ffn) in enumerate(_positions(cfg)):
+        b = {}
+        if mixer == "attn":
+            b["attn"] = _attn_specs(cfg, n_periods, dtype)
+        else:
+            b["mamba"] = M2.mixer_specs(cfg, n_periods, dtype)
+        b[ffn] = _moe_specs(cfg, n_periods, dtype) if ffn == "moe" \
+            else _mlp_specs(cfg, n_periods, dtype)
+        blocks[f"pos{i}"] = b
+    d = cfg.d_model
+    specs = {
+        "embed": Spec((vocab_padded, d), ("vocab", "embed"), "small", dtype=dtype),
+        "ln_f": Spec((d,), (None,), "ones", dtype=dtype),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = Spec((d, vocab_padded), ("embed", "vocab"), "small", dtype=dtype)
+    return specs
+
+
+def _attn_fwd(cfg, mesh, rules, p, x, attn_chunk):
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, Hq, hd)
+    k = (h @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+    q = constrain(q, mesh, ("batch", "act_seq", "act_heads", None), rules)
+    o = L.attention(q, k, v, causal=True, chunk=attn_chunk)
+    return x + o.reshape(B, S, Hq * hd) @ p["wo"]
+
+
+def _ffn_fwd(cfg, mesh, rules, p, x, ffn_kind, moe_impl):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    if ffn_kind == "moe":
+        y, aux = L.moe(h, p, cfg.moe.top_k, cfg.moe.capacity_factor, impl=moe_impl)
+    else:
+        y, aux = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), 0.0
+    x = x + y
+    return constrain(x, mesh, ("batch", "act_seq", "act_embed"), rules), \
+        jnp.asarray(aux, jnp.float32)
+
+
+def forward_hidden(cfg, mesh, rules, params, batch, *, moe_impl="einsum",
+                   attn_chunk=1024, **_):
+    from repro.models.transformer import embed_tokens
+    x = embed_tokens(params, batch["tokens"])
+    x = constrain(x, mesh, ("batch", "act_seq", "act_embed"), rules)
+    positions = _positions(cfg)
+
+    def sublayer(i, mixer, ffn):
+        def f(x, b):
+            if mixer == "attn":
+                x = _attn_fwd(cfg, mesh, rules, b["attn"], x, attn_chunk)
+            else:
+                x = M2.mixer_forward(cfg, mesh, rules, b["mamba"], x)
+            return _ffn_fwd(cfg, mesh, rules, b[ffn], x, ffn, moe_impl)
+        # per-sublayer remat: the 8 heterogeneous sublayers otherwise keep
+        # all their internals live through the period-group backward
+        return jax.checkpoint(f, prevent_cse=False) if cfg.remat else f
+
+    subs = [sublayer(i, m, f) for i, (m, f) in enumerate(positions)]
+
+    def body(carry, p):
+        x, aux = carry
+        for i in range(len(positions)):
+            x, a = subs[i](x, p[f"pos{i}"])
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux
+
+
+# --- decode ---------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-period stacked state: KV cache for the attn position, SSM states
+    for the mamba positions."""
+    n_periods = cfg.n_layers // cfg.hybrid_period
+    state = {}
+    for i, (mixer, _) in enumerate(_positions(cfg)):
+        if mixer == "attn":
+            state[f"pos{i}"] = tuple(L.KVCache.zeros(
+                batch, max_len, cfg.n_kv_heads, cfg.hd, dtype, layers=n_periods))[:2]
+        else:
+            state[f"pos{i}"] = tuple(M2.mixer_init_state(
+                cfg, batch, layers=n_periods, dtype=dtype))
+    return state
+
+
+def decode_step(cfg, mesh, rules, params, state, batch, *, length,
+                moe_impl="einsum", **_):
+    from repro.models.transformer import embed_tokens, _head_weight
+    x = embed_tokens(params, batch["token"])
+    positions = _positions(cfg)
+    B = x.shape[0]
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+
+    def body(x, ps):
+        p, st = ps
+        new_st = {}
+        for i, (mixer, ffn) in enumerate(positions):
+            b = p[f"pos{i}"]
+            if mixer == "attn":
+                k_l, v_l = st[f"pos{i}"]
+                h = L.rms_norm(x, b["attn"]["ln"], cfg.norm_eps)
+                q = (h @ b["attn"]["wq"]).reshape(B, 1, Hq, hd)
+                k = (h @ b["attn"]["wk"]).reshape(B, 1, Hkv, hd)
+                v = (h @ b["attn"]["wv"]).reshape(B, 1, Hkv, hd)
+                cache = L.cache_update(L.KVCache(k_l, v_l, length), k, v)
+                o = L.decode_attention(q, cache)
+                x = x + o.reshape(B, 1, Hq * hd) @ b["attn"]["wo"]
+                new_st[f"pos{i}"] = (cache.k, cache.v)
+            else:
+                x, st2 = M2.mixer_decode(cfg, mesh, rules, b["mamba"], x,
+                                         M2.SSMState(*st[f"pos{i}"]))
+                new_st[f"pos{i}"] = tuple(st2)
+            x, _ = _ffn_fwd(cfg, mesh, rules, b[ffn], x, ffn, moe_impl)
+        return x, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ _head_weight(cfg, params)).astype(jnp.float32)
+    return logits, new_state

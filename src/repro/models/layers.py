@@ -1,0 +1,353 @@
+"""Core neural layers: RMSNorm, RoPE / M-RoPE, chunked GQA attention, SwiGLU,
+MoE (einsum- and gather-dispatch variants), causal conv.
+
+Everything is pure-jnp (XLA path). Pallas kernels in ``repro.kernels`` mirror
+the perf-critical ops; models select them via flags so the CPU dry-run always
+lowers the jnp path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                            / (head_dim // 2)))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d2 = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                  # [d2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, d2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :d2], x[..., d2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float):
+    """Qwen2-VL M-RoPE. positions3: [..., S, 3] (t/h/w); sections sum to D/2."""
+    d2 = x.shape[-1] // 2
+    assert sum(sections) == d2, (sections, d2)
+    freqs = rope_freqs(x.shape[-1], theta)                   # [d2]
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=d2)              # [d2] -> which stream
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions3.shape[:-1] + (d2,)).astype(jnp.int32),
+        axis=-1)                                             # [..., S, d2]
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :d2], x[..., d2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked exact softmax — memory-safe at 32k prefill)
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, q_pos, causal: bool):
+    """q: [B,Sq,Hkv,G,D]; k,v: [B,T,Hkv,D]; q_pos: [Sq] absolute positions."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if causal:
+        t_pos = jnp.arange(k.shape[1])
+        mask = q_pos[:, None] >= t_pos[None, :]              # [Sq, T]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return o
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+              chunk: int = 1024):
+    """Exact attention, scanned over query chunks.
+
+    q: [B, Sq, Hq, D]; k, v: [B, T, Hkv, D]. Hq % Hkv == 0 (GQA).
+    q_offset: absolute position of q[0] (prefill: 0; decode: T-1).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    if Sq % chunk != 0 or Sq <= chunk:
+        out = _attend_block(qg, k, v, q_offset + jnp.arange(Sq), causal)
+        return out.reshape(B, Sq, Hq, D)
+
+    n = Sq // chunk
+    qs = qg.reshape(B, n, chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, qi_i):
+        qi, i = qi_i
+        pos = q_offset + i * chunk + jnp.arange(chunk)
+        return None, _attend_block(qi, k, v, pos, causal)
+
+    # remat the chunk: without this the backward pass saves every chunk's
+    # [chunk, T] f32 score/prob matrices == the full S^2 attention matrix
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    _, out = jax.lax.scan(body, None, (qs, jnp.arange(n)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, D)
+    return out
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, T, Hkv, D]
+    v: jax.Array
+    length: jax.Array  # [] int32 — tokens filled
+
+    @staticmethod
+    def zeros(batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16, layers=None):
+        shp = (batch, max_len, n_kv, head_dim)
+        if layers is not None:
+            shp = (layers,) + shp
+        return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype),
+                       jnp.zeros((), jnp.int32))
+
+
+def cache_update(cache: KVCache, k_new, v_new) -> KVCache:
+    """Insert [B,1,Hkv,D] at cache.length."""
+    idx = cache.length
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, idx, 0, 0))
+    return KVCache(k, v, idx + k_new.shape[1])
+
+
+class KVCacheQ(NamedTuple):
+    """int8-quantized KV cache (the paper's quantization trick applied to the
+    serving state): codes int8 + per-(token, head) f32 scales. Halves (vs
+    bf16) the dominant decode-memory term; phi3's MHA cache needs this to fit."""
+    k: jax.Array        # int8 [..., B, T, Hkv, D]
+    v: jax.Array
+    k_scale: jax.Array  # f32 [..., B, T, Hkv]
+    v_scale: jax.Array
+    length: jax.Array
+
+    @staticmethod
+    def zeros(batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16, layers=None):
+        shp = (batch, max_len, n_kv, head_dim)
+        sshp = (batch, max_len, n_kv)
+        if layers is not None:
+            shp = (layers,) + shp
+            sshp = (layers,) + sshp
+        return KVCacheQ(jnp.zeros(shp, jnp.int8), jnp.zeros(shp, jnp.int8),
+                        jnp.zeros(sshp, jnp.float32), jnp.zeros(sshp, jnp.float32),
+                        jnp.zeros((), jnp.int32))
+
+
+def _kv_quant(x):
+    """[B,S,H,D] -> (int8 codes, f32 scale [B,S,H])."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    c = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return c, s
+
+
+def cache_update_q(cache: KVCacheQ, k_new, v_new) -> KVCacheQ:
+    idx = cache.length
+    kc, ks = _kv_quant(k_new)
+    vc, vs = _kv_quant(v_new)
+    k = jax.lax.dynamic_update_slice(cache.k, kc, (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, vc, (0, idx, 0, 0))
+    k_s = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, idx, 0))
+    v_s = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, idx, 0))
+    return KVCacheQ(k, v, k_s, v_s, idx + k_new.shape[1])
+
+
+def decode_attention_q(q, cache: KVCacheQ, dtype=jnp.bfloat16):
+    k = (cache.k.astype(jnp.float32)
+         * cache.k_scale[..., None]).astype(dtype)
+    v = (cache.v.astype(jnp.float32)
+         * cache.v_scale[..., None]).astype(dtype)
+    return decode_attention(q, KVCache(k, v, cache.length))
+
+
+def decode_attention(q, cache: KVCache):
+    """q: [B,1,Hq,D] against a cache of T entries (masked beyond length)."""
+    B, _, Hq, D = q.shape
+    Hkv = cache.k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    scale = D ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32) * scale,
+                   cache.k.astype(jnp.float32))
+    t_pos = jnp.arange(cache.k.shape[1])
+    s = jnp.where((t_pos < cache.length)[None, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(cache.v.dtype), cache.v)
+    return o.reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    return jax.nn.gelu(x @ w_up + b_up, approximate=True) @ w_down + b_down
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def _router(x, w_gate, top_k: int):
+    """Return (probs [B,S,E] fp32, topk_idx [B,S,K], topk_p [B,S,K], aux)."""
+    logits = (x.astype(jnp.float32) @ w_gate.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_idx = jax.lax.top_k(probs, top_k)
+    topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+    # switch-style load-balance loss
+    E = w_gate.shape[-1]
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(topk_idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return probs, topk_idx, topk_p, aux
+
+
+def _capacity(S: int, top_k: int, E: int, factor: float) -> int:
+    c = int(S * top_k * factor) // E
+    return max(8, min(S, ((c + 7) // 8) * 8))
+
+
+def _group(x, group_size: int):
+    """[B, S, ...] -> [B*S/g, g, ...]: bounds the O(g*E*C) dispatch buffers.
+    Routing becomes per-group (standard Mesh-TF style grouping)."""
+    B, S = x.shape[:2]
+    g = min(group_size, S)
+    if S % g:
+        g = S
+    return x.reshape((B * (S // g), g) + x.shape[2:]), (B, S)
+
+
+def _ungroup(y, bs):
+    B, S = bs
+    return y.reshape((B, S) + y.shape[2:])
+
+
+def _expert_ffn(xe, w_gate_e, w_up_e, w_down_e):
+    """xe: [B,E,C,d]; weights: [E,d,f] / [E,f,d]."""
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, w_gate_e))
+    h = h * jnp.einsum("becd,edf->becf", xe, w_up_e)
+    return jnp.einsum("becf,efd->becd", h, w_down_e)
+
+
+def moe_einsum(x, params, top_k: int, capacity_factor: float = 1.0,
+               group_size: int = 512):
+    """Capacity-based one-hot dispatch (Mesh-TF style). x: [B,S,d]."""
+    x, bs = _group(x, group_size)
+    B, S, d = x.shape
+    E = params["w_router"].shape[-1]
+    C = _capacity(S, top_k, E, capacity_factor)
+    probs, topk_idx, topk_p, aux = _router(x, params["w_router"], top_k)
+
+    kmask = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)          # [B,S,K,E]
+    emask = jnp.sum(kmask, axis=2)                                   # [B,S,E]
+    pos = jnp.cumsum(emask, axis=1) - emask                          # arrival order
+    keep = emask * (pos < C)
+    disp = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=x.dtype) \
+        * keep[..., None].astype(x.dtype)                            # [B,S,E,C]
+    gate_e = jnp.sum(kmask * topk_p[..., None], axis=2)              # [B,S,E]
+    comb = disp * gate_e[..., None].astype(x.dtype)
+
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)
+    he = _expert_ffn(xe, params["w_gate_e"], params["w_up_e"], params["w_down_e"])
+    y = jnp.einsum("bsec,becd->bsd", comb, he)
+    return _ungroup(y, bs), aux
+
+
+def moe_gather(x, params, top_k: int, capacity_factor: float = 1.0,
+               group_size: int = 512):
+    """Gather/scatter dispatch: no O(S*E*C*d) einsum FLOPs (hillclimb impl)."""
+    x, bs = _group(x, group_size)
+    B, S, d = x.shape
+    E = params["w_router"].shape[-1]
+    C = _capacity(S, top_k, E, capacity_factor)
+    probs, topk_idx, topk_p, aux = _router(x, params["w_router"], top_k)
+
+    kmask = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)           # [B,S,K,E]
+    emask = jnp.sum(kmask, axis=2)                                    # [B,S,E]
+    pos = (jnp.cumsum(emask, axis=1) - emask)                         # [B,S,E]
+    keep = (emask > 0) & (pos < C)
+
+    # token index per (expert, slot): sort token ids by (chosen, arrival)
+    key = jnp.where(keep, pos, jnp.float32(S + 1))                    # [B,S,E]
+    order = jnp.argsort(key, axis=1)[:, :C, :]                        # [B,C,E]
+    tok_idx = jnp.transpose(order, (0, 2, 1))                         # [B,E,C]
+    slot_valid = jnp.take_along_axis(
+        jnp.transpose(keep, (0, 2, 1)), tok_idx, axis=2)              # [B,E,C]
+
+    xe = jnp.take_along_axis(x[:, None], tok_idx[..., None], axis=2)  # [B,E,C,d]
+    xe = xe * slot_valid[..., None].astype(x.dtype)
+    he = _expert_ffn(xe, params["w_gate_e"], params["w_up_e"], params["w_down_e"])
+
+    # combine: each token reads its K slots back
+    pos_k = jnp.take_along_axis(pos, topk_idx, axis=-1)               # [B,S,K]
+    keep_k = jnp.take_along_axis(keep, topk_idx, axis=-1)             # [B,S,K]
+    flat = he.reshape(B, E * C, d)
+    slot = (topk_idx * C + pos_k.astype(jnp.int32))                   # [B,S,K]
+    yk = jnp.take_along_axis(flat[:, None], slot[..., None], axis=2)
+    # flat[:,None] is [B,1,E*C,d]; take along axis=2 with [B,S,K,1] -> [B,S,K,d]
+    w = (topk_p * keep_k).astype(x.dtype)[..., None]
+    y = jnp.sum(yk * w, axis=2)
+    return _ungroup(y, bs), aux
+
+
+def moe(x, params, top_k: int, capacity_factor: float = 1.0,
+        impl: str = "einsum", group_size: int = 512):
+    fn = moe_einsum if impl == "einsum" else moe_gather
+    return fn(x, params, top_k, capacity_factor, group_size)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (Mamba front)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w):
+    """x: [B,S,D]; w: [K,D] depthwise. Causal: output[t] uses x[t-K+1..t]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def causal_conv1d_update(state, x_new, w):
+    """Decode step. state: [B,K-1,D]; x_new: [B,1,D] -> (new_state, out [B,1,D])."""
+    window = jnp.concatenate([state, x_new], axis=1)        # [B,K,D]
+    out = jnp.einsum("bkd,kd->bd", window, w)[:, None]
+    return window[:, 1:], out

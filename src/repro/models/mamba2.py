@@ -1,0 +1,233 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+The chunked SSD algorithm: within-chunk "attention-like" quadratic term +
+cross-chunk state recurrence carried by an associative scan. Decode is the
+exact linear recurrence (O(1) state per token) — this is what makes the
+``long_500k`` cell runnable where quadratic attention is not.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import Spec
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def segsum(a):
+    """a: [..., q] -> [..., q, q] with out[i,j] = sum(a[j+1..i]) (i>=j) else -inf."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(xdt, a, B, C, chunk: int):
+    """SSD scan. xdt: [b,l,h,p] (x pre-multiplied by dt); a: [b,l,h] (dt*A, <0);
+    B, C: [b,l,n]. Returns y: [b,l,h,p] and final state [b,h,p,n]."""
+    b, l, h, p = xdt.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    if l % chunk:
+        chunk = l
+    c, q = l // chunk, chunk
+    xc = xdt.reshape(b, c, q, h, p)
+    ac = a.reshape(b, c, q, h)
+    Bc = B.reshape(b, c, q, n)
+    Cc = C.reshape(b, c, q, n)
+
+    cum = jnp.cumsum(ac, axis=2)                                   # [b,c,q,h]
+    Lmat = jnp.exp(segsum(ac.transpose(0, 1, 3, 2)))               # [b,c,h,q,q]
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp",
+                        Cc, Bc, Lmat.astype(Cc.dtype), xc)
+
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                   # [b,c,q,h]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Bc, decay_end.astype(Bc.dtype), xc)        # [b,c,h,p,n]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # [b,c,h]
+
+    def comb(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s2 + s1 * d2[..., None, None].astype(s1.dtype)
+
+    _, spref = jax.lax.associative_scan(
+        comb, (chunk_decay.astype(jnp.float32), states.astype(jnp.float32)),
+        axis=1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(spref[:, :1]), spref[:, :-1]], axis=1)     # [b,c,h,p,n]
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                       Cc.astype(jnp.float32), h_prev,
+                       jnp.exp(cum).transpose(0, 1, 2, 3))
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, l, h, p)
+    return y.astype(xdt.dtype), spref[:, -1]
+
+
+def ssd_ref(xdt, a, B, C):
+    """Quadratic "duality" reference: y = (L ∘ (C Bᵀ)) xdt over the full seq.
+    O(l²) — small shapes only; the oracle for ssd_chunked in tests."""
+    Lmat = jnp.exp(segsum(a.transpose(0, 2, 1)))                   # [b,h,l,l]
+    return jnp.einsum("bin,bjn,bhij,bjhp->bihp",
+                      C.astype(jnp.float32), B.astype(jnp.float32),
+                      Lmat, xdt.astype(jnp.float32)).astype(xdt.dtype)
+
+
+def ssd_decode(state, x_t, a_t, B_t, C_t):
+    """One-token recurrence. state: [b,h,p,n]; x_t: [b,h,p] (pre-mul by dt);
+    a_t: [b,h]; B_t, C_t: [b,n]."""
+    decay = jnp.exp(a_t)[..., None, None]                          # [b,h,1,1]
+    state = state * decay + jnp.einsum("bhp,bn->bhpn",
+                                       x_t.astype(jnp.float32),
+                                       B_t.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    return state, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mixer_specs(cfg, n_layers: int, dtype) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di, n, nh, K = s.d_inner(d), s.d_state, s.n_heads(d), s.d_conv
+    Ls = n_layers
+    return {
+        "ln": Spec((Ls, d), ("layers", None), "ones", dtype=dtype),
+        "w_z": Spec((Ls, d, di), ("layers", "embed", "ssm_inner"), dtype=dtype),
+        "w_x": Spec((Ls, d, di), ("layers", "embed", "ssm_inner"), dtype=dtype),
+        "w_B": Spec((Ls, d, n), ("layers", "embed", None), dtype=dtype),
+        "w_C": Spec((Ls, d, n), ("layers", "embed", None), dtype=dtype),
+        "w_dt": Spec((Ls, d, nh), ("layers", "embed", "ssm_heads"), dtype=dtype),
+        "conv_x": Spec((Ls, K, di), ("layers", "conv", "ssm_inner"), "small", dtype=dtype),
+        "conv_B": Spec((Ls, K, n), ("layers", "conv", None), "small", dtype=dtype),
+        "conv_C": Spec((Ls, K, n), ("layers", "conv", None), "small", dtype=dtype),
+        "dt_bias": Spec((Ls, nh), ("layers", "ssm_heads"), "zeros", dtype=jnp.float32),
+        "A_log": Spec((Ls, nh), ("layers", "ssm_heads"), "zeros", dtype=jnp.float32),
+        "D": Spec((Ls, nh), ("layers", "ssm_heads"), "ones", dtype=jnp.float32),
+        "norm": Spec((Ls, di), ("layers", "ssm_inner"), "ones", dtype=dtype),
+        "w_out": Spec((Ls, di, d), ("layers", "ssm_inner", "embed"), dtype=dtype),
+    }
+
+
+def mixer_forward(cfg, mesh, rules, p, x):
+    """Full-sequence Mamba2 mixer. x: [B,S,d] -> [B,S,d] residual added."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    di, n, nh, hd = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    z = h @ p["w_z"]
+    xs = jax.nn.silu(L.causal_conv1d(h @ p["w_x"], p["conv_x"]))
+    Bs = jax.nn.silu(L.causal_conv1d(h @ p["w_B"], p["conv_B"]))
+    Cs = jax.nn.silu(L.causal_conv1d(h @ p["w_C"], p["conv_C"]))
+    dt = jax.nn.softplus(((h @ p["w_dt"]).astype(jnp.float32)) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                       # [nh]
+
+    xh = xs.reshape(B_, S, nh, hd)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    a = dt * A
+    y, _ = ssd_chunked(xdt, a, Bs, Cs, s.chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B_, S, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + y @ p["w_out"]
+    return constrain(out, mesh, ("batch", "act_seq", "act_embed"), rules)
+
+
+class SSMState(NamedTuple):
+    conv_x: jax.Array   # [..., B, K-1, di]
+    conv_B: jax.Array   # [..., B, K-1, n]
+    conv_C: jax.Array   # [..., B, K-1, n]
+    h: jax.Array        # [..., B, nh, hd, n] fp32
+
+
+def mixer_init_state(cfg, batch: int, layers=None, dtype=jnp.bfloat16) -> SSMState:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, nh, hd, K = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim, s.d_conv
+    def z(shp, dt=dtype):
+        if layers is not None:
+            shp = (layers,) + shp
+        return jnp.zeros(shp, dt)
+    return SSMState(z((batch, K - 1, di)), z((batch, K - 1, n)),
+                    z((batch, K - 1, n)), z((batch, nh, hd, n), jnp.float32))
+
+
+def mixer_decode(cfg, mesh, rules, p, x, state: SSMState):
+    """Single-token Mamba2 step. x: [B,1,d]."""
+    s = cfg.ssm
+    B_, _, d = x.shape
+    di, n, nh, hd = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+
+    hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    z = hx @ p["w_z"]
+    cx, xr = L.causal_conv1d_update(state.conv_x, hx @ p["w_x"], p["conv_x"])
+    cB, Br = L.causal_conv1d_update(state.conv_B, hx @ p["w_B"], p["conv_B"])
+    cC, Cr = L.causal_conv1d_update(state.conv_C, hx @ p["w_C"], p["conv_C"])
+    xs, Bs, Cs = jax.nn.silu(xr), jax.nn.silu(Br), jax.nn.silu(Cr)
+    dt = jax.nn.softplus((hx @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xh = xs.reshape(B_, nh, hd)
+    xdt = xh * dt.reshape(B_, nh, 1).astype(xh.dtype)
+    a_t = dt.reshape(B_, nh) * A
+    hstate, y = ssd_decode(state.h, xdt, a_t, Bs[:, 0], Cs[:, 0])
+    y = y + xh * p["D"][None, :, None].astype(xh.dtype)
+    y = y.reshape(B_, 1, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + y @ p["w_out"]
+    return out, SSMState(cx, cB, cC, hstate)
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 LM
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg, vocab_padded: int, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    specs = {
+        "embed": Spec((vocab_padded, d), ("vocab", "embed"), "small", dtype=dtype),
+        "ln_f": Spec((d,), (None,), "ones", dtype=dtype),
+        "blocks": mixer_specs(cfg, cfg.n_layers, dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = Spec((d, vocab_padded), ("embed", "vocab"), "small", dtype=dtype)
+    return specs
+
+
+def forward_hidden(cfg, mesh, rules, params, batch, **_):
+    from repro.models.transformer import embed_tokens
+    x = embed_tokens(params, batch["tokens"])
+    x = constrain(x, mesh, ("batch", "act_seq", "act_embed"), rules)
+
+    def body(x, p):
+        return mixer_forward(cfg, mesh, rules, p, x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, jnp.float32(0.0)
+
+
+def decode_step(cfg, mesh, rules, params, state: SSMState, batch, **_):
+    from repro.models.transformer import embed_tokens, _head_weight
+    x = embed_tokens(params, batch["token"])
+
+    def body(x, ps):
+        p, st = ps
+        x, st2 = mixer_decode(cfg, mesh, rules, p, x, SSMState(*st))
+        return x, tuple(st2)
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], tuple(state)))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ _head_weight(cfg, params)).astype(jnp.float32)
+    return logits, SSMState(*new_state)

@@ -1,0 +1,307 @@
+"""Unified decoder-only transformer: dense (yi/phi3/tinyllama/granite),
+MoE (granite-moe/qwen3-moe), and VLM backbone (qwen2-vl, M-RoPE).
+
+Layer-stacked params + ``lax.scan`` keep HLO size flat in depth (compile-time
+critical for the 512-device dry-run). Loss is chunked over the sequence so
+[B,S,V] logits are never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models import layers as L
+from repro.models.common import Spec
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _layer_specs(cfg, n_layers: int, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    Ls = n_layers
+    s = {
+        "ln1": Spec((Ls, d), ("layers", None), "ones", dtype=dtype),
+        "ln2": Spec((Ls, d), ("layers", None), "ones", dtype=dtype),
+        "wq": Spec((Ls, d, Hq * hd), ("layers", "embed", "q_heads"), dtype=dtype),
+        "wk": Spec((Ls, d, Hkv * hd), ("layers", "embed", "kv_heads"), dtype=dtype),
+        "wv": Spec((Ls, d, Hkv * hd), ("layers", "embed", "kv_heads"), dtype=dtype),
+        "wo": Spec((Ls, Hq * hd, d), ("layers", "q_heads", "embed"), dtype=dtype),
+    }
+    if cfg.moe is not None and cfg.moe.every == 1:
+        E, f = cfg.moe.num_experts, cfg.moe.d_ff_expert
+        s.update({
+            "w_router": Spec((Ls, d, E), ("layers", "embed", "experts"),
+                             "small", dtype=jnp.float32),
+            "w_gate_e": Spec((Ls, E, d, f), ("layers", "experts", "embed", "ffn_exp"), dtype=dtype),
+            "w_up_e": Spec((Ls, E, d, f), ("layers", "experts", "embed", "ffn_exp"), dtype=dtype),
+            "w_down_e": Spec((Ls, E, f, d), ("layers", "experts", "ffn_exp", "embed"), dtype=dtype),
+        })
+    else:
+        f = cfg.d_ff
+        s.update({
+            "w_gate": Spec((Ls, d, f), ("layers", "embed", "ffn"), dtype=dtype),
+            "w_up": Spec((Ls, d, f), ("layers", "embed", "ffn"), dtype=dtype),
+            "w_down": Spec((Ls, f, d), ("layers", "ffn", "embed"), dtype=dtype),
+        })
+    return s
+
+
+def param_specs(cfg, vocab_padded: int, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    specs = {
+        "embed": Spec((vocab_padded, d), ("vocab", "embed"), "small", dtype=dtype),
+        "ln_f": Spec((d,), (None,), "ones", dtype=dtype),
+        "blocks": _layer_specs(cfg, cfg.n_layers, dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = Spec((d, vocab_padded), ("embed", "vocab"), "small", dtype=dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _positions_for(cfg, batch, B, S, offset=0):
+    if cfg.mrope_sections is not None:
+        return batch["positions"]  # [B, S, 3]
+    return jnp.arange(S)[None, :] + offset
+
+
+def _apply_rope(cfg, x, positions):
+    if cfg.mrope_sections is not None:
+        return L.apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return L.apply_rope(x, positions, cfg.rope_theta)
+
+
+def block_forward(cfg, mesh, rules, p, x, positions, *, moe_impl="einsum",
+                  attn_chunk=1024, constrain_qk: bool = True):
+    """One decoder block (full-sequence path). x: [B,S,d]."""
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, Hq, hd)
+    k = (h @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+    q = _apply_rope(cfg, q, positions)
+    k = _apply_rope(cfg, k, positions)
+    if constrain_qk:
+        # §Perf iteration 1 finding: forcing head sharding here makes SPMD
+        # reshard q across the (kv, group) reshape every layer — leave the
+        # propagated sharding from wq/wk (already head-sharded) alone.
+        q = constrain(q, mesh, ("batch", "act_seq", "act_heads", None), rules)
+        k = constrain(k, mesh, ("batch", "act_seq", "act_kv_heads", None), rules)
+    o = L.attention(q, k, v, causal=True, chunk=attn_chunk)
+    x = x + o.reshape(B, S, Hq * hd) @ p["wo"]
+
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "w_router" in p:
+        y, aux = L.moe(h, p, cfg.moe.top_k, cfg.moe.capacity_factor, impl=moe_impl)
+    else:
+        y, aux = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), 0.0
+    x = x + y
+    x = constrain(x, mesh, ("batch", "act_seq", "act_embed"), rules)
+    return x, jnp.asarray(aux, jnp.float32)
+
+
+def block_decode(cfg, mesh, rules, p, x, cache, positions,
+                 *, moe_impl="einsum"):
+    """One decoder block, single-token decode. x: [B,1,d]."""
+    B, _, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, 1, Hq, hd)
+    k = (h @ p["wk"]).reshape(B, 1, Hkv, hd)
+    v = (h @ p["wv"]).reshape(B, 1, Hkv, hd)
+    q = _apply_rope(cfg, q, positions)
+    k = _apply_rope(cfg, k, positions)
+    if isinstance(cache, L.KVCacheQ):
+        cache = L.cache_update_q(cache, k, v)
+        o = L.decode_attention_q(q, cache, dtype=x.dtype)
+    else:
+        cache = L.cache_update(cache, k, v)
+        o = L.decode_attention(q, cache)
+    x = x + o.reshape(B, 1, Hq * hd) @ p["wo"]
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "w_router" in p:
+        y, _ = L.moe(h, p, cfg.moe.top_k, cfg.moe.capacity_factor, impl=moe_impl)
+    else:
+        y = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _head_weight(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def forward_hidden(cfg, mesh, rules, params, batch, *, moe_impl="einsum",
+                   attn_chunk=1024):
+    """Embed + all blocks + final norm. Returns hidden [B,S,d] and aux loss."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if "embeds" in batch:               # stubbed modality frontend
+        x = batch["embeds"]
+    else:
+        x = embed_tokens(params, tokens)
+    x = constrain(x, mesh, ("batch", "act_seq", "act_embed"), rules)
+    positions = _positions_for(cfg, batch, B, S)
+
+    body = functools.partial(block_forward, cfg, mesh, rules,
+                             moe_impl=moe_impl, attn_chunk=attn_chunk)
+
+    g = max(cfg.remat_group, 1)
+    n_groups = cfg.n_layers // g if cfg.n_layers % g == 0 else cfg.n_layers
+
+    def scan_body(x, p):
+        # save EXACTLY the bf16 group input; everything else (f32 converts,
+        # scores, MoE dispatch) is recomputed in the backward pass
+        x = checkpoint_name(x, "block_in")
+        if n_groups != cfg.n_layers:   # remat group: inner scan, no saves
+            def inner(x, pl):
+                x, a = body(pl, x, positions)
+                return x, a
+            x, a = jax.lax.scan(inner, x, p)
+            a = jnp.sum(a)
+        else:
+            x, a = body(p, x, positions)
+        return x, a
+
+    if cfg.remat:
+        scan_body = jax.checkpoint(
+            scan_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names("block_in"))
+    if n_groups != cfg.n_layers:
+        blocks = jax.tree.map(
+            lambda w: w.reshape((n_groups, g) + w.shape[1:]), params["blocks"])
+    else:
+        blocks = params["blocks"]
+    x, auxs = jax.lax.scan(scan_body, x, blocks)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, jnp.sum(auxs)
+
+
+def chunked_ce_loss(cfg, mesh, rules, hidden, w_head, targets, mask,
+                    vocab: int, chunk: int = 512):
+    """Cross-entropy without materializing [B,S,V]: scan over seq chunks."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    hs = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+    Vp = w_head.shape[-1]
+
+    def body(acc, xs):
+        h, t, m = xs
+        logits = (h @ w_head).astype(jnp.float32)            # [B,chunk,Vp]
+        logits = jnp.where(jnp.arange(Vp) < vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - tl) * m)
+        return (acc[0] + loss, acc[1] + jnp.sum(m)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ts, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg, mesh, rules, params, batch, vocab: int, *,
+            moe_impl="einsum", attn_chunk=1024, aux_weight=0.01):
+    hidden, aux = forward_hidden(cfg, mesh, rules, params, batch,
+                                 moe_impl=moe_impl, attn_chunk=attn_chunk)
+    mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+    ce = chunked_ce_loss(cfg, mesh, rules, hidden, _head_weight(cfg, params),
+                         batch["targets"], mask, vocab)
+    return ce + aux_weight * aux / max(cfg.n_layers, 1)
+
+
+def prefill(cfg, mesh, rules, params, batch, max_len: int, *,
+            moe_impl="einsum", attn_chunk=1024):
+    """Run the full prompt; return (last-token logits, KV caches [L,...])."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = batch["embeds"] if "embeds" in batch else embed_tokens(params, tokens)
+    positions = _positions_for(cfg, batch, B, S)
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+
+    def scan_body(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+        k = (h @ p["wk"]).reshape(B, S, Hkv, hd)
+        v = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+        q = _apply_rope(cfg, q, positions)
+        k_r = _apply_rope(cfg, k, positions)
+        o = L.attention(q, k_r, v, causal=True, chunk=attn_chunk)
+        x = x + o.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "w_router" in p:
+            y, _ = L.moe(h, p, cfg.moe.top_k, cfg.moe.capacity_factor, impl=moe_impl)
+        else:
+            y = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        x = constrain(x + y, mesh, ("batch", "act_seq", "act_embed"), rules)
+        # pad cache to max_len
+        pad = max_len - S
+        kc = jnp.pad(k_r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (kc, vc)
+
+    if cfg.remat:
+        scan_body = jax.checkpoint(scan_body, prevent_cse=False)
+    x, (kc, vc) = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (x @ _head_weight(cfg, params)).astype(jnp.float32)
+    cache = L.KVCache(kc, vc, jnp.int32(S))
+    return logits, cache
+
+
+def decode_step(cfg, mesh, rules, params, cache, batch, *,
+                moe_impl="einsum"):
+    """One token for every sequence. cache leaves: [L,B,T,Hkv,hd]."""
+    token = batch["token"]                                  # [B,1]
+    B = token.shape[0]
+    x = embed_tokens(params, token)
+    pos = cache.length
+    quant = isinstance(cache, L.KVCacheQ)
+    if cfg.mrope_sections is not None:
+        positions = batch["positions"]                       # [B,1,3]
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+    leaves = ((cache.k, cache.v, cache.k_scale, cache.v_scale) if quant
+              else (cache.k, cache.v))
+
+    def scan_body(x, pk):
+        p, lv = pk
+        c = L.KVCacheQ(*lv, pos) if quant else L.KVCache(*lv, pos)
+        x, nc = block_decode(cfg, mesh, rules, p, x, c, positions,
+                             moe_impl=moe_impl)
+        out = ((nc.k, nc.v, nc.k_scale, nc.v_scale) if quant
+               else (nc.k, nc.v))
+        return x, out
+
+    x, new_leaves = jax.lax.scan(scan_body, x, (params["blocks"], leaves))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ _head_weight(cfg, params)).astype(jnp.float32)
+    out_cache = (L.KVCacheQ(*new_leaves, pos + 1) if quant
+                 else L.KVCache(*new_leaves, pos + 1))
+    return logits, out_cache

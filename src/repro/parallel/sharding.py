@@ -1,0 +1,151 @@
+"""Logical-axis sharding rules (DP / TP / FSDP / EP / SP).
+
+Params and activations carry *logical* axis names; a rules table maps them to
+mesh axes per (arch, shape, mesh). Divisibility is checked: a logical axis is
+only mapped onto a mesh axis when the dimension divides evenly (e.g.
+whisper-tiny's 6 heads are replicated across a 16-way model axis, and its MLP
+picks up the TP sharding instead).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Optional[Tuple[str, ...]]
+Rules = Dict[str, Axes]
+
+
+def axis_size(mesh: Mesh, axes: Axes) -> int:
+    if not axes:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes: Axes) -> Axes:
+    """Return `axes` if `dim` divides their product, else None (replicate)."""
+    if not axes:
+        return None
+    return tuple(axes) if dim % axis_size(mesh, axes) == 0 else None
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_rules(mesh: Mesh, cfg, shape=None, *, fsdp: Optional[bool] = None) -> Rules:
+    """Build the logical->mesh table for one (arch, shape, mesh) cell."""
+    dp = dp_axes(mesh)
+    model = ("model",) if "model" in mesh.shape else None
+    use_fsdp = cfg.use_fsdp if fsdp is None else fsdp
+
+    n_q = cfg.n_heads
+    n_kv = cfg.n_kv_heads
+    batch = shape.global_batch if shape is not None else None
+    # KV-cache sequence sharding (SP/flash-decode style): used when the batch
+    # can't cover the data axis (512k single-seq decode) and/or when the KV
+    # heads don't divide the model axis (GQA kv<16: never replicate a 100GB+
+    # cache across TP ranks — shard its time dimension instead).
+    kv_axes: list = []
+    if shape is not None and shape.kind == "decode":
+        if batch is not None and batch % axis_size(mesh, dp) != 0:
+            kv_axes += list(dp)
+        if model and n_kv % axis_size(mesh, model) != 0:
+            kv_axes += list(model)
+
+    r: Rules = {
+        # --- activations ---
+        "batch": None if (batch is not None and batch % axis_size(mesh, dp)) else dp,
+        "act_seq": None,
+        "act_embed": None,
+        "act_heads": _fit(mesh, n_q, model),
+        "act_kv_heads": _fit(mesh, n_kv, model),
+        "act_ffn": _fit(mesh, max(cfg.d_ff, 1), model),
+        "kv_seq": (_fit(mesh, shape.seq_len, tuple(kv_axes))
+                   if (kv_axes and shape is not None) else None),
+        "act_experts": None,
+        # --- params ---
+        "embed": dp if use_fsdp else None,          # FSDP dim
+        "q_heads": _fit(mesh, n_q, model),
+        "kv_heads": _fit(mesh, n_kv, model),
+        "head_dim": None,
+        "ffn": _fit(mesh, max(cfg.d_ff, 1), model),
+        "vocab": _fit(mesh, padded_vocab(cfg, mesh), model),
+        "layers": None,
+        "norm": None,
+        "conv": None,
+        "ssm_state": None,
+        "ssm_heads": None,
+        "ssm_inner": None,
+    }
+
+    if cfg.ssm is not None:
+        d_in = cfg.ssm.d_inner(cfg.d_model)
+        n_sh = d_in // cfg.ssm.head_dim
+        r["ssm_heads"] = _fit(mesh, n_sh, model)
+        r["ssm_inner"] = _fit(mesh, d_in, model) if r["ssm_heads"] is None else None
+
+    if cfg.moe is not None:
+        exp_axes = _fit(mesh, cfg.moe.num_experts, model)
+        r["experts"] = exp_axes
+        r["act_experts"] = exp_axes
+        # EP when expert count divides; else TP inside each expert.
+        r["ffn_exp"] = None if exp_axes else _fit(mesh, cfg.moe.d_ff_expert, model)
+    else:
+        r["experts"] = None
+        r["ffn_exp"] = None
+    return r
+
+
+def padded_vocab(cfg, mesh: Mesh) -> int:
+    """Vocab padded so the `model` axis shards it evenly (multiple of 256)."""
+    if cfg.vocab == 0:
+        return 0
+    mult = 256
+    if "model" in mesh.shape:
+        import math
+        mult = math.lcm(256, mesh.shape["model"])
+    return ((cfg.vocab + mult - 1) // mult) * mult
+
+
+def pspec(names: Sequence[Optional[str]], rules: Rules) -> P:
+    """Logical axis names -> PartitionSpec under `rules`.
+
+    Guards against the same mesh axis appearing twice in one spec (XLA error):
+    later duplicates degrade to replication.
+    """
+    used: set = set()
+    parts = []
+    for n in names:
+        axes = rules.get(n) if n else None
+        if axes and not (set(axes) & used):
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else tuple(axes))
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named(mesh: Mesh, names: Sequence[Optional[str]], rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, pspec(names, rules))
+
+
+def constrain(x, mesh: Mesh, names: Sequence[Optional[str]], rules: Rules):
+    """with_sharding_constraint by logical names (no-op outside jit/mesh)."""
+    return jax.lax.with_sharding_constraint(x, named(mesh, names, rules))
+
+
+def tree_pspecs(axes_tree, rules: Rules):
+    """Map a pytree of logical-axes tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda names: pspec(names, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )

@@ -1,0 +1,192 @@
+"""Optimizers, from scratch (no optax in this container).
+
+``adamw`` drives the LM train_step of every dry-run cell. ``gd``, ``adadelta``,
+``adagrad``, ``adam`` are the paper's comparison methods (Section V-B) used by
+the accuracy/speedup benchmarks on GA-MLP models.
+
+All are (init, update) pairs over pytrees; update returns (new_params,
+new_state). Moments are fp32 regardless of param dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]   # (grads, state, params)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def gd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new, state
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return _zeros_like_f32(params)
+
+    def update(grads, acc, params):
+        acc = jax.tree.map(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                           acc, grads)
+        new = jax.tree.map(
+            lambda p, g, a: (p.astype(jnp.float32)
+                             - lr * g.astype(jnp.float32) / (jnp.sqrt(a) + eps)
+                             ).astype(p.dtype), params, grads, acc)
+        return new, acc
+    return Optimizer(init, update)
+
+
+def adadelta(lr: float = 1.0, rho: float = 0.95, eps: float = 1e-6) -> Optimizer:
+    def init(params):
+        return (_zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(grads, state, params):
+        eg, ex = state
+        eg = jax.tree.map(lambda a, g: rho * a + (1 - rho) * jnp.square(
+            g.astype(jnp.float32)), eg, grads)
+        dx = jax.tree.map(lambda g, a, x: -jnp.sqrt(x + eps) / jnp.sqrt(a + eps)
+                          * g.astype(jnp.float32), grads, eg, ex)
+        ex = jax.tree.map(lambda x, d: rho * x + (1 - rho) * jnp.square(d), ex, dx)
+        new = jax.tree.map(lambda p, d: (p.astype(jnp.float32) + lr * d
+                                         ).astype(p.dtype), params, dx)
+        return new, (eg, ex)
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return (_zeros_like_f32(params), _zeros_like_f32(params),
+                jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        m, v, t = state
+        t = t + 1
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32),
+                         m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), v, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, mi, vi):
+            step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                step = step + lr * weight_decay * p32
+            return (p32 - step).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), (m, v, t)
+    return Optimizer(init, update)
+
+
+def adamw(lr: float = 3e-4, weight_decay: float = 0.1, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit Adam (blockwise-quantized moments — the paper's quantization idea
+# applied to optimizer memory; Dettmers-style, per-last-dim-row scales)
+# ---------------------------------------------------------------------------
+
+def _q8_sym(x):
+    """f32 -> (int8 codes, row scales). Symmetric, per-leading-rows blocks."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    return jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8), s
+
+
+def _dq8(codes, s):
+    return codes.astype(jnp.float32) * s
+
+
+def adamw8bit(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
+              eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    """AdamW with int8 m/v storage: 2 bytes/param of optimizer state instead
+    of 8 (plus 1/last-dim for scales). Scalars/1-d leaves stay f32."""
+    def small(p):
+        return p.ndim < 2
+
+    def init(params):
+        def z(p):
+            if small(p):
+                return jnp.zeros(p.shape, jnp.float32)
+            return (jnp.zeros(p.shape, jnp.int8),
+                    jnp.ones(p.shape[:-1] + (1,), jnp.float32))
+        return (jax.tree.map(z, params), jax.tree.map(z, params),
+                jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        m_q, v_q, t = state
+        t = t + 1
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, mq, vq):
+            g = g.astype(jnp.float32)
+            if small(p):
+                m = b1 * mq + (1 - b1) * g
+                v = b2 * vq + (1 - b2) * jnp.square(g)
+                new_m, new_v = m, v
+            else:
+                m = b1 * _dq8(*mq) + (1 - b1) * g
+                v = jnp.maximum(b2 * _dq8(*vq), 0.0) + (1 - b2) * jnp.square(g)
+                new_m, new_v = _q8_sym(m), _q8_sym(v)
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                step = step + lr * weight_decay * p32
+            return (p32 - step).astype(p.dtype), new_m, new_v
+
+        is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 \
+            and all(hasattr(e, "dtype") for e in x)
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(m_q, is_leaf=is_leaf)
+        flat_v = jax.tree.leaves(v_q, is_leaf=is_leaf)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+        return new_p, (new_m, new_v, t)
+    return Optimizer(init, update)
+
+
+def make_opt_pspecs(opt_state_shape, param_pspecs_tree, params_shape):
+    """PartitionSpecs for an opt state: leaves matching a param shape reuse the
+    param's pspec; 8-bit scale leaves (shape[:-1] + (1,)) reuse it minus the
+    last axis; scalars replicate."""
+    from jax.sharding import PartitionSpec as P
+    shape_to_spec = {}
+    scale_to_spec = {}
+    for sds, spec in zip(jax.tree.leaves(params_shape),
+                         jax.tree.leaves(param_pspecs_tree)):
+        shape_to_spec.setdefault(tuple(sds.shape), spec)
+        sc_shape = tuple(sds.shape[:-1]) + (1,)
+        parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+        scale_to_spec.setdefault(sc_shape, P(*parts[:-1], None))
+
+    def spec_for(leaf):
+        shp = tuple(leaf.shape)
+        if shp in shape_to_spec:
+            return shape_to_spec[shp]
+        return scale_to_spec.get(shp, P())
+
+    return jax.tree.map(spec_for, opt_state_shape)

@@ -1,0 +1,194 @@
+"""pdADMM-G correctness: subproblem optimality, theory-implied invariants
+(Lemma 4, Lemma 1 objective decrease, Theorem 1 residual convergence), and
+the quantized variant's guarantees."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pdadmm, quantize, subproblems as sp
+from repro.core.pdadmm import ADMMConfig
+from repro.graph.datasets import tiny
+
+small = st.floats(-3.0, 3.0, allow_nan=False, width=32)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return tiny()
+
+
+@pytest.fixture(scope="module")
+def trained(ds):
+    X = ds.augmented(4)
+    dims = [X.shape[1], 48, 48, ds.n_classes]
+    cfg = ADMMConfig(nu=1e-2, rho=1.0)
+    state, hist = pdadmm.train(jax.random.PRNGKey(0), X, ds.labels, ds.masks,
+                               dims, cfg, epochs=25)
+    return state, hist, cfg, X
+
+
+# --- theory-implied invariants ------------------------------------------------
+
+def test_objective_monotone_decrease(trained):
+    """Lemma 1: with ρ > max(4νS², (√17+1)ν/2) the objective decreases."""
+    _, hist, _, _ = trained
+    obj = hist["objective"]
+    viol = sum(1 for a, b in zip(obj, obj[1:]) if b > a + 1e-5 * abs(a))
+    assert viol == 0, f"{viol} increases in {len(obj)} iters"
+
+
+def test_residual_converges(trained):
+    """Theorem 1: ||p_{l+1} - q_l|| -> 0."""
+    _, hist, _, _ = trained
+    assert hist["residual"][-1] < 1e-2
+    assert hist["residual"][-1] <= np.max(hist["residual"][1:]) + 1e-9
+
+
+def test_lemma4_dual_identity(trained):
+    """Lemma 4: u_l = ν (q_l - f(z_l)) EXACTLY after each iteration."""
+    state, _, cfg, _ = trained
+    for l in range(len(state.u)):
+        rhs = cfg.nu * (state.q[l] - jnp.maximum(state.z[l], 0.0))
+        np.testing.assert_allclose(np.asarray(state.u[l]), np.asarray(rhs),
+                                   atol=1e-6)
+
+
+def test_convergence_rate_ck_decreasing(ds):
+    """Theorem 4: c_k (running min of squared update distances) is monotone
+    non-increasing and summable-ish; check o(1/k) proxy: k*c_k shrinks."""
+    X = ds.augmented(4)
+    dims = [X.shape[1], 32, 32, ds.n_classes]
+    cfg = ADMMConfig(nu=1e-2, rho=1.0)
+    state = pdadmm.init_state(jax.random.PRNGKey(1), X, dims, cfg)
+    step = jax.jit(functools.partial(pdadmm.iterate, config=cfg))
+    dists, prev = [], state
+    for _ in range(30):
+        state, _ = step(state, X, ds.labels, ds.masks["train"])
+        d = 0.0
+        for fam in ("p", "W", "b", "z", "q"):   # Theorem 4's c_k sums all
+            d += sum(float(jnp.sum((a - b) ** 2))
+                     for a, b in zip(jax.tree.leaves(getattr(state, fam)),
+                                     jax.tree.leaves(getattr(prev, fam))))
+        dists.append(d)
+        prev = state
+    c = np.minimum.accumulate(dists)
+    assert c[0] > 0
+    assert np.all(np.diff(c) <= 1e-12)
+    # o(1/k) proxy: k * c_k at the end well below the early values
+    assert len(c) * c[-1] < 5 * c[0]
+
+
+# --- subproblem optimality ------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_b_update_is_exact_minimizer(seed):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+    p = jax.random.normal(ks[0], (12, 5))
+    W = jax.random.normal(ks[1], (5, 7))
+    z = jax.random.normal(ks[2], (12, 7))
+    b_star = sp.update_b(p, W, z)
+    base = float(jnp.sum((z - p @ W - b_star) ** 2))
+    for d in (1e-1, -1e-1):  # perturbation large enough to beat f32 noise
+        for j in range(7):
+            b_pert = b_star.at[j].add(d)
+            pert = float(jnp.sum((z - p @ W - b_pert) ** 2))
+            assert pert >= base - 1e-4 * abs(base)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_z_hidden_closed_form_is_minimizer(seed):
+    """The two-branch closed form beats dense grid search elementwise."""
+    k = jax.random.PRNGKey(seed)
+    a, q, z0 = jax.random.normal(k, (3, 64))
+    z_star = sp.update_z_hidden(a, q, z0, nu=1.0)
+
+    def obj(z):
+        return (z - a) ** 2 + (q - jnp.maximum(z, 0)) ** 2 + (z - z0) ** 2
+
+    grid = jnp.linspace(-6, 6, 2001)[:, None]
+    best = jnp.min(obj(grid * jnp.ones((1, 64))), axis=0)
+    assert float(jnp.max(obj(z_star) - best)) < 1e-4
+
+
+def test_z_last_fista_optimality(ds):
+    """FISTA z_L solves R(z)+ (ν/2)||z-a||²: subgradient ~ 0 at solution."""
+    V, C = 40, 5
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (V, C))
+    labels = jax.random.randint(key, (V,), 0, C)
+    mask = jnp.ones((V,))
+    nu = 0.5
+    z = sp.update_z_last(a, a, labels, mask, nu, n_iters=200)
+    _, g = sp.ce_value_grad(z, labels, mask)
+    kkt = g + nu * (z - a)
+    assert float(jnp.max(jnp.abs(kkt))) < 1e-3
+
+
+def test_p_update_descent_condition():
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 6)
+    V, ni, no = 16, 8, 9
+    p = jax.random.normal(ks[0], (V, ni))
+    W = jax.random.normal(ks[1], (ni, no))
+    b = jax.random.normal(ks[2], (no,))
+    z = jax.random.normal(ks[3], (V, no))
+    qp = jax.random.normal(ks[4], (V, ni))
+    up = jax.random.normal(ks[5], (V, ni)) * 0.1
+    phi0 = sp.phi(p, W, b, z, qp, up, 0.01, 1.0)
+    p_new, tau = sp.update_p(p, W, b, z, qp, up, 0.01, 1.0, 1e-3)
+    phi1 = sp.phi(p_new, W, b, z, qp, up, 0.01, 1.0)
+    # backtracking guarantees majorization => descent
+    assert float(phi1) <= float(phi0) + 1e-5 * abs(float(phi0))
+
+
+# --- quantized variant -----------------------------------------------------------
+
+def test_q_variant_stays_on_grid_and_converges(ds):
+    X = ds.augmented(4)
+    dims = [X.shape[1], 48, 48, ds.n_classes]
+    grid = quantize.uniform_grid(8, -2.0, 6.0)
+    cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, grid=grid)
+    state, hist = pdadmm.train(jax.random.PRNGKey(0), X, ds.labels, ds.masks,
+                               dims, cfg, epochs=25)
+    for p in state.p[1:]:
+        np.testing.assert_allclose(np.asarray(p), np.asarray(grid.project(p)),
+                                   atol=1e-6)
+    obj = hist["objective"]
+    assert obj[-1] < obj[0]
+    assert hist["residual"][-1] < 0.05
+
+
+def test_q_matches_unquantized_accuracy(ds):
+    """'Without loss of performance' (paper Fig 5 claim) on synthetic data."""
+    X = ds.augmented(4)
+    dims = [X.shape[1], 48, 48, ds.n_classes]
+    key = jax.random.PRNGKey(0)
+    cfg = ADMMConfig(nu=1e-2, rho=1.0)
+    _, h_fp = pdadmm.train(key, X, ds.labels, ds.masks, dims, cfg, epochs=30)
+    grid = quantize.uniform_grid(8, -2.0, 6.0)
+    cfg_q = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, quantize_q=True,
+                       grid=grid)
+    _, h_q = pdadmm.train(key, X, ds.labels, ds.masks, dims, cfg_q, epochs=30)
+    assert h_q["test_acc"][-1] >= h_fp["test_acc"][-1] - 0.1
+
+
+def test_comm_bytes_accounting():
+    dims = [100, 50, 50, 50, 7]
+    V = 1000
+    base = pdadmm.comm_bytes_per_iteration(dims, V, ADMMConfig())
+    g8 = quantize.uniform_grid(8, 0, 1)
+    only_p = pdadmm.comm_bytes_per_iteration(
+        dims, V, ADMMConfig(quantize_p=True, grid=g8))
+    both = pdadmm.comm_bytes_per_iteration(
+        dims, V, ADMMConfig(quantize_p=True, quantize_q=True, grid=g8))
+    assert base == V * 50 * 12 * 3           # 3 boundaries, 3 fp32 tensors
+    assert only_p < base and both < only_p
+    # p&q at 8 bit: (1 + 4 + 1)/12 = 50% of baseline
+    assert abs(both / base - 0.5) < 1e-6

@@ -1,0 +1,112 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import integer_grid, uniform_grid
+from repro.kernels import ref
+from repro.kernels.admm_pgrad import admm_pgrad
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_linear import fused_linear
+from repro.kernels.quantize_kernel import grid_decode, grid_encode, grid_project
+from repro.kernels.relu_zupdate import relu_zupdate
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 256),
+                                   (512, 384, 128), (64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["linear", "residual"])
+def test_fused_linear(M, K, N, dtype, mode):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    p, W = _rand(ks[0], (M, K), dtype), _rand(ks[1], (K, N), dtype)
+    b, z = _rand(ks[2], (N,), dtype), _rand(ks[3], (M, N), dtype)
+    got = fused_linear(p, W, b, z, mode=mode, bm=128, bk=128, bn=128,
+                       interpret=True)
+    want = ref.fused_linear_ref(p, W, b, z, mode=mode)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("V,ni,no", [(128, 128, 128), (256, 256, 512),
+                                     (512, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_admm_pgrad(V, ni, no, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r = _rand(ks[0], (V, no), dtype)
+    W = _rand(ks[1], (ni, no), dtype)
+    u, p, q = (_rand(k, (V, ni), dtype) for k in ks[2:])
+    got = admm_pgrad(r, W, u, p, q, nu=0.01, rho=1.0, bm=128, bk=128, bn=128,
+                     interpret=True)
+    want = ref.admm_pgrad_ref(r, W, u, p, q, nu=0.01, rho=1.0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("shape", [(128, 256), (64, 100), (512, 1024), (7, 13)])
+@pytest.mark.parametrize("grid", [integer_grid(), uniform_grid(8, -2.0, 6.0),
+                                  uniform_grid(16, -4.0, 4.0)])
+def test_quantize_kernels(shape, grid):
+    x = jax.random.normal(jax.random.PRNGKey(2), shape) * 3.0
+    np.testing.assert_allclose(grid_project(x, grid, interpret=True),
+                               ref.grid_project_ref(x, grid), atol=1e-6)
+    enc = grid_encode(x, grid, interpret=True)
+    np.testing.assert_array_equal(np.asarray(enc),
+                                  np.asarray(ref.grid_encode_ref(x, grid)))
+    dec = grid_decode(enc, grid, interpret=True)
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(ref.grid_decode_ref(enc, grid)),
+                               atol=1e-6)
+    # roundtrip == projection
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(grid.project(x)), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(256, 512), (128, 100), (512, 1000)])
+def test_relu_zupdate(shape):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    a, q, z0 = (jax.random.normal(k, shape) for k in ks)
+    got = relu_zupdate(a, q, z0, interpret=True)
+    want = ref.relu_zupdate_ref(a, q, z0)
+
+    # when branch objectives tie to f32 precision either branch is a valid
+    # minimizer — compare OBJECTIVE values, not the argmin itself
+    def obj(z):
+        return (z - a) ** 2 + (q - jnp.maximum(z, 0)) ** 2 + (z - z0) ** 2
+    np.testing.assert_allclose(np.asarray(obj(got)), np.asarray(obj(want)),
+                               rtol=1e-4, atol=1e-4)
+    # optimality: fused output never worse than either branch candidate
+    zn = jnp.minimum((a + z0) / 2, 0)
+    zp = jnp.maximum((a + q + z0) / 3, 0)
+    assert bool(jnp.all(obj(got) <= obj(zn) + 1e-5))
+    assert bool(jnp.all(obj(got) <= obj(zp) + 1e-5))
+    # and matches ref on all non-tied elements
+    tied = np.abs(np.asarray(obj(zn) - obj(zp))) < 1e-3
+    np.testing.assert_allclose(np.asarray(got)[~tied], np.asarray(want)[~tied],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,S,T,D", [(1, 2, 128, 128, 64),
+                                       (2, 1, 256, 256, 32),
+                                       (1, 2, 64, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, H, S, T, D, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = _rand(ks[0], (B, H, S, D), dtype)
+    k = _rand(ks[1], (B, H, T, D), dtype)
+    v = _rand(ks[2], (B, H, T, D), dtype)
+    got = flash_attention(q, k, v, causal=causal, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)

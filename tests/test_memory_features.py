@@ -1,0 +1,122 @@
+"""Tests for the memory-pressure features: 8-bit Adam, int8 KV cache,
+bf16 grad accumulation, grouped remat."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.models import layers as L
+from repro.train import optim
+
+
+def _rosenbrockish(params):
+    return jnp.sum((params["a"] - 1.0) ** 2) \
+        + 10.0 * jnp.sum((params["b"] - params["a"][:, :1]) ** 2)
+
+
+def test_adamw8bit_converges_like_adamw():
+    params0 = {"a": jnp.zeros((4, 8)), "b": jnp.zeros((4, 8))}
+    losses = {}
+    for name, opt in (("adam", optim.adamw(5e-2, weight_decay=0.0)),
+                      ("adam8", optim.adamw8bit(5e-2, weight_decay=0.0))):
+        params = jax.tree.map(jnp.copy, params0)
+        state = opt.init(params)
+        step = jax.jit(lambda p, s: opt.update(jax.grad(_rosenbrockish)(p), s, p))
+        for _ in range(300):
+            params, state = step(params, state)
+        losses[name] = float(_rosenbrockish(params))
+    assert losses["adam8"] < 1e-2, losses
+    assert losses["adam8"] < losses["adam"] * 50 + 1e-2
+
+
+def test_adamw8bit_state_is_quantized():
+    params = {"w": jnp.zeros((16, 32)), "b": jnp.zeros((32,))}
+    opt = optim.adamw8bit(1e-3)
+    state = opt.init(params)
+    m, v, t = state
+    codes, scale = m["w"]
+    assert codes.dtype == jnp.int8 and codes.shape == (16, 32)
+    assert scale.shape == (16, 1)
+    assert m["b"].dtype == jnp.float32      # small leaves stay exact
+
+
+def test_int8_kv_cache_matches_bf16_decode():
+    B, T, H, D = 2, 16, 2, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    cache = L.KVCache.zeros(B, T, H, D, jnp.bfloat16)
+    cache_q = L.KVCacheQ.zeros(B, T, H, D)
+    for t in range(6):
+        k_new = jax.random.normal(jax.random.fold_in(ks[0], t), (B, 1, H, D),
+                                  jnp.bfloat16)
+        v_new = jax.random.normal(jax.random.fold_in(ks[1], t), (B, 1, H, D),
+                                  jnp.bfloat16)
+        cache = L.cache_update(cache, k_new, v_new)
+        cache_q = L.cache_update_q(cache_q, k_new, v_new)
+    q = jax.random.normal(ks[2], (B, 1, 4, D), jnp.bfloat16)
+    o = L.decode_attention(q, cache)
+    o_q = L.decode_attention_q(q, cache_q)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_q, np.float32), atol=0.07)
+    assert cache_q.k.dtype == jnp.int8
+
+
+def test_phi3_uses_quantized_cache_end_to_end():
+    mesh = make_host_mesh()
+    from repro.models.api import build
+    cfg = get_arch("phi3-mini-3.8b").reduced()
+    cfg = cfg.__class__(**{**cfg.__dict__, "kv_cache_bits": 8})
+    shape = ShapeConfig("d", 32, 2, "decode")
+    bundle = build(cfg, mesh, shape)
+    params = bundle.init(jax.random.PRNGKey(0))
+    state = bundle.serve_state_shape(shape)
+    assert isinstance(state, L.KVCacheQ)
+    batch = bundle.make_inputs(shape)
+    logits, state2 = bundle.serve_step(params, state, batch, length=16)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert state2.k.dtype == jnp.int8
+
+
+def test_grouped_remat_matches_ungrouped_loss():
+    mesh = make_host_mesh()
+    from repro.models.api import build
+    base = get_arch("tinyllama-1.1b").reduced()
+    shape = ShapeConfig("t", 32, 2, "train")
+    cfg_a = base.__class__(**{**base.__dict__, "n_layers": 4, "remat": True,
+                              "remat_group": 1})
+    cfg_b = base.__class__(**{**base.__dict__, "n_layers": 4, "remat": True,
+                              "remat_group": 2})
+    ba, bb = build(cfg_a, mesh, shape), build(cfg_b, mesh, shape)
+    params = ba.init(jax.random.PRNGKey(0))
+    batch = ba.make_inputs(shape)
+    la = jax.jit(ba.loss)(params, batch)
+    lb = jax.jit(bb.loss)(params, batch)
+    np.testing.assert_allclose(float(la), float(lb), rtol=1e-3)
+    ga = jax.grad(ba.loss)(params, batch)
+    gb = jax.grad(bb.loss)(params, batch)
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_bf16_accum_close_to_f32():
+    mesh = make_host_mesh()
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.api import build
+    from repro.train.trainer import make_accum_train_step
+    cfg = get_arch("tinyllama-1.1b").reduced()
+    shape = ShapeConfig("t", 32, 4, "train")
+    bundle = build(cfg, mesh, shape)
+    params = bundle.init(jax.random.PRNGKey(0))
+    opt = optim.adamw(1e-3)
+    batch = TokenPipeline(cfg.vocab, 32, 4).batch(0)
+    outs = {}
+    for name, adt in (("f32", None), ("bf16", jnp.bfloat16)):
+        step = jax.jit(make_accum_train_step(bundle, opt, 2, accum_dtype=adt))
+        p2, _, loss = step(jax.tree.map(jnp.copy, params), opt.init(params),
+                           batch)
+        outs[name] = float(loss)
+    np.testing.assert_allclose(outs["f32"], outs["bf16"], rtol=1e-2)

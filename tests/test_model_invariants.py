@@ -1,0 +1,191 @@
+"""Model-level invariants: decode==prefill (KV cache), MoE mass conservation,
+Mamba2 chunked SSD == quadratic duality oracle == step recurrence, RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.api import build
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+# --- attention / KV cache ---------------------------------------------------
+
+def test_chunked_attention_matches_unchunked():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 16))
+    k = jax.random.normal(ks[1], (2, 128, 2, 16))
+    v = jax.random.normal(ks[2], (2, 128, 2, 16))
+    full = L.attention(q, k, v, causal=True, chunk=128)
+    chunked = L.attention(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-vl-7b"])
+def test_decode_matches_full_forward(arch, mesh):
+    """Running S tokens through decode one-by-one == causal full forward."""
+    cfg = get_arch(arch).reduced()
+    cfg = cfg.__class__(**{**cfg.__dict__, "remat": False})
+    S, B = 12, 2
+    shape = ShapeConfig("t", S, B, "decode")
+    bundle = build(cfg, mesh, shape)
+    params = bundle.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+
+    from repro.models import transformer as T
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, 3))
+        batch["positions"] = pos
+    hidden, _ = T.forward_hidden(cfg, mesh, bundle.rules, params, batch,
+                                 attn_chunk=S)
+    head = T._head_weight(cfg, params)
+    logits_full = (hidden @ head).astype(jnp.float32)
+
+    cache = L.KVCache.zeros(B, S, cfg.n_kv_heads, cfg.hd,
+                            jnp.bfloat16, layers=cfg.n_layers)
+    outs = []
+    for t in range(S):
+        b = {"token": toks[:, t:t + 1]}
+        if cfg.family == "vlm":
+            b["positions"] = jnp.broadcast_to(
+                jnp.full((1, 1, 1), t, jnp.int32), (B, 1, 3))
+        lg, cache = T.decode_step(cfg, mesh, bundle.rules, params,
+                                  L.KVCache(cache.k, cache.v, jnp.int32(t)),
+                                  b)
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full),
+                               rtol=5e-2, atol=5e-1)  # bf16 params
+    # argmax agreement is the functional bar
+    agree = np.mean(np.argmax(np.asarray(logits_dec), -1)
+                    == np.argmax(np.asarray(logits_full), -1))
+    assert agree > 0.95, agree
+
+
+# --- MoE ----------------------------------------------------------------------
+
+def _moe_params(key, d, E, f):
+    ks = jax.random.split(key, 4)
+    return {
+        "w_router": jax.random.normal(ks[0], (d, E)) * 0.02,
+        "w_gate_e": jax.random.normal(ks[1], (E, d, f)) / np.sqrt(d),
+        "w_up_e": jax.random.normal(ks[2], (E, d, f)) / np.sqrt(d),
+        "w_down_e": jax.random.normal(ks[3], (E, f, d)) / np.sqrt(f),
+    }
+
+
+def test_moe_einsum_matches_gather():
+    """The two dispatch implementations are numerically identical when no
+    token is dropped (capacity ample)."""
+    d, E, f, B, S = 16, 8, 32, 2, 64
+    params = _moe_params(jax.random.PRNGKey(0), d, E, f)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    y1, _ = L.moe(x, params, top_k=2, capacity_factor=4.0, impl="einsum")
+    y2, _ = L.moe(x, params, top_k=2, capacity_factor=4.0, impl="gather")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_routing_mass_conservation():
+    """Sum of combine weights per token == 1 when not dropped, 0..1 if dropped."""
+    d, E, f, B, S = 8, 4, 16, 2, 32
+    params = _moe_params(jax.random.PRNGKey(2), d, E, f)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, d))
+    probs, idx, topk_p, _ = L._router(x, params["w_router"], 2)
+    assert np.allclose(np.asarray(jnp.sum(topk_p, -1)), 1.0, atol=1e-5)
+    assert np.all(np.asarray(topk_p) >= 0)
+    # top-k indices are distinct per token
+    assert np.all(np.asarray(idx[..., 0]) != np.asarray(idx[..., 1]))
+
+
+def test_moe_capacity_drops_are_zero_not_garbage():
+    d, E, f, B, S = 8, 2, 16, 1, 64
+    params = _moe_params(jax.random.PRNGKey(4), d, E, f)
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, d))
+    y_small, _ = L.moe(x, params, top_k=2, capacity_factor=0.25, impl="einsum")
+    y_big, _ = L.moe(x, params, top_k=2, capacity_factor=4.0, impl="einsum")
+    # dropped tokens contribute zero output, so norm shrinks, stays finite
+    assert np.all(np.isfinite(np.asarray(y_small)))
+    assert float(jnp.linalg.norm(y_small)) <= float(jnp.linalg.norm(y_big)) + 1e-3
+
+
+# --- Mamba2 SSD -------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_ssd_chunked_matches_quadratic_dual(seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    b, l, h, p, n = 2, 64, 3, 8, 16
+    xdt = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (b, l, h))) * 0.5
+    B = jax.random.normal(ks[2], (b, l, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    y_chunk, _ = M2.ssd_chunked(xdt, a, B, C, chunk=16)
+    y_quad = M2.ssd_ref(xdt, a, B, C)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_quad),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_matches_chunked():
+    """Step-by-step recurrence == chunked scan (prefill/decode consistency)."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    b, l, h, p, n = 1, 32, 2, 4, 8
+    xdt = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (b, l, h))) * 0.3
+    B = jax.random.normal(ks[2], (b, l, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    y_chunk, final_state = M2.ssd_chunked(xdt, a, B, C, chunk=8)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        state, y = M2.ssd_decode(state, xdt[:, t], a[:, t], B[:, t], C[:, t])
+        ys.append(y)
+    y_dec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_chunk),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(final_state),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --- RoPE ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 16, 2, 32))
+    pos = jnp.arange(16)[None, :]
+    y = L.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <R_m q, R_n k> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(9), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(10), (1, 1, 1, 32))
+    def dot_at(m, n):
+        qm = L.apply_rope(q, jnp.array([[m]]), 10_000.0)
+        kn = L.apply_rope(k, jnp.array([[n]]), 10_000.0)
+        return float(jnp.vdot(qm, kn))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+    assert abs(dot_at(0, 0) - dot_at(9, 9)) < 1e-4
+
+
+def test_mrope_reduces_to_rope_when_positions_equal():
+    hd = 32
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 8, 2, hd))
+    pos = jnp.arange(8)[None, :]
+    pos3 = jnp.broadcast_to(pos[..., None], (1, 8, 3))
+    y1 = L.apply_rope(x, pos, 10_000.0)
+    y2 = L.apply_mrope(x, pos3, (4, 6, 6), 10_000.0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)

@@ -1,0 +1,90 @@
+"""Property-based tests (hypothesis) for the quantization substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (affine_decode, affine_encode,
+                                 calibrated_grid, integer_grid, uniform_grid)
+
+f32 = st.floats(-50.0, 50.0, allow_nan=False, width=32)
+
+
+@st.composite
+def grids(draw):
+    kind = draw(st.sampled_from(["int", "u8", "u16"]))
+    if kind == "int":
+        lo = draw(st.integers(-8, 0))
+        hi = draw(st.integers(1, 40))
+        return integer_grid(lo, hi)
+    lo = draw(st.floats(-20.0, 0.0, allow_nan=False))
+    hi = lo + draw(st.floats(0.5, 40.0, allow_nan=False))
+    return uniform_grid(8 if kind == "u8" else 16, lo, hi)
+
+
+@settings(max_examples=80, deadline=None)
+@given(grids(), st.lists(f32, min_size=1, max_size=64))
+def test_projection_properties(grid, xs):
+    x = jnp.asarray(xs, jnp.float32)
+    p = grid.project(x)
+    # idempotent
+    np.testing.assert_allclose(np.asarray(grid.project(p)), np.asarray(p),
+                               rtol=0, atol=1e-6)
+    # within half a step of x when x is inside the range
+    inside = (np.asarray(x) >= grid.lo) & (np.asarray(x) <= grid.hi)
+    err = np.abs(np.asarray(p) - np.asarray(x))
+    assert np.all(err[inside] <= grid.step / 2 + 1e-5)
+    # on-grid: (p - lo)/step is integral (f32 storage costs ~eps*|x|/step)
+    frac = (np.asarray(p, np.float64) - grid.lo) / grid.step
+    tol = max(1e-3, 1e-6 * (abs(grid.lo) + abs(grid.hi)) / grid.step)
+    assert np.allclose(frac, np.round(frac), atol=tol)
+    # monotone
+    order = np.argsort(np.asarray(x))
+    assert np.all(np.diff(np.asarray(p)[order]) >= -1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(grids(), st.lists(f32, min_size=1, max_size=64))
+def test_encode_decode_roundtrip(grid, xs):
+    x = jnp.asarray(xs, jnp.float32)
+    codes = grid.encode(x)
+    assert codes.dtype in (jnp.uint8, jnp.uint16)
+    dec = grid.decode(codes)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(grid.project(x)),
+                               rtol=0, atol=grid.step * 1e-3 + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(f32, min_size=2, max_size=128), st.sampled_from([8, 16]))
+def test_affine_codec_error_bound(xs, bits):
+    x = jnp.asarray(xs, jnp.float32)
+    codes, scale, zero = affine_encode(x, bits=bits)
+    dec = affine_decode(codes, scale, zero)
+    # deterministic rounding error <= step/2
+    step = float(jnp.maximum((jnp.max(x) - jnp.min(x)) / (2 ** bits - 1), 1e-12))
+    assert float(jnp.max(jnp.abs(dec - x))) <= step * 0.51 + 1e-6
+
+
+def test_stochastic_rounding_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((200_000,), 0.3)
+    grid_lo, grid_hi = 0.0, 1.0
+    codes, scale, zero = affine_encode(
+        jnp.concatenate([x, jnp.array([grid_lo, grid_hi])]), bits=8, key=key)
+    dec = affine_decode(codes, scale, zero)[:-2]
+    assert abs(float(jnp.mean(dec)) - 0.3) < 1e-3
+
+
+def test_calibrated_grid_covers_data():
+    x = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 5
+    g = calibrated_grid(8, x)
+    assert g.lo <= float(jnp.min(x)) and g.hi >= float(jnp.max(x)) - 1e-5
+    assert float(jnp.max(jnp.abs(g.project(x) - x))) <= g.step / 2 + 1e-6
+
+
+def test_paper_default_grid():
+    g = integer_grid()
+    assert g.n_levels == 22 and g.bits == 5
+    x = jnp.asarray([-3.0, -1.2, -0.4, 0.4, 7.7, 25.0])
+    np.testing.assert_allclose(np.asarray(g.project(x)),
+                               [-1.0, -1.0, 0.0, 0.0, 8.0, 20.0])
