@@ -13,9 +13,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro.analysis import hlo as H
+from repro.comm import CommLedger
+from repro.launch.mesh import compat_make_mesh
 from repro.core import quantize
 from repro.core.pdadmm import ADMMConfig
 from repro.graph.datasets import tiny
@@ -35,8 +36,7 @@ def wire_bytes(mesh, cfg, V=256, h=64, L=8, C=4):
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
     fp = wire_bytes(mesh, ADMMConfig(nu=1e-2, rho=1.0))
     g8 = quantize.uniform_grid(8, -2.0, 6.0)
     q8 = wire_bytes(mesh, ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True,
@@ -45,7 +45,7 @@ def main():
     print(f"  fp32 wire : {fp:10d} bytes")
     print(f"  int8 wire : {q8:10d} bytes  ({100*(1-q8/fp):.0f}% saved)")
 
-    # and it still converges:
+    # and it still converges — with every payload on the CommLedger:
     ds = tiny(V=128)
     X = ds.augmented(4)
     key = jax.random.PRNGKey(0)
@@ -53,10 +53,15 @@ def main():
     Xp = jnp.maximum(X @ P0, 0)
     cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, quantize_q=True,
                      grid=g8)
+    ledger = CommLedger()
     _, hist = SP.distributed_train(mesh, key, Xp, ds.labels, ds.masks, 8,
-                                   ds.n_classes, cfg, epochs=15)
+                                   ds.n_classes, cfg, epochs=15,
+                                   ledger=ledger)
     print(f"quantized-wire objective: {hist['objective'][0]:.3f} -> "
           f"{hist['objective'][-1]:.3f} (residual {hist['residual'][-1]:.1e})")
+    s = ledger.summary()
+    print(f"ledger: {s['total_bytes']} wire bytes over {s['iterations']} "
+          f"iters ({100 * s['savings_vs_fp32']:.0f}% saved vs fp32)")
 
 
 if __name__ == "__main__":

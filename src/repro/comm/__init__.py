@@ -1,0 +1,29 @@
+"""Adaptive quantized communication runtime.
+
+Everything that crosses a link lives here:
+
+  * :mod:`repro.comm.codecs`     — ``WireCodec`` protocol + fp32/int16/int8/
+    int4 implementations with exact per-payload byte accounting and
+    error-feedback encoding.
+  * :mod:`repro.comm.controller` — AdaQP-style residual-driven bit-width
+    controller (hysteresis-bounded schedule switches, global byte budget).
+  * :mod:`repro.comm.ledger`     — ``CommLedger``: the single source of truth
+    for bytes-on-the-wire, per iteration and per edge.
+  * :mod:`repro.comm.transport`  — neighbor-exchange and all-reduce entry
+    points used by ``parallel/stage_parallel.py`` and
+    ``parallel/collectives.py`` (no other module hand-rolls encode/decode).
+"""
+from repro.comm.codecs import (AffineCodec, Fp32Codec, GridCodec, WireCodec,
+                               codec_for_bits, codec_for_grid,
+                               encode_with_error_feedback)
+from repro.comm.controller import BitWidthController, ControllerConfig
+from repro.comm.ledger import CommLedger
+from repro.comm.transport import (NeighborExchange, psum_with_error_feedback,
+                                  quantized_psum)
+
+__all__ = [
+    "AffineCodec", "Fp32Codec", "GridCodec", "WireCodec",
+    "codec_for_bits", "codec_for_grid", "encode_with_error_feedback",
+    "BitWidthController", "ControllerConfig", "CommLedger",
+    "NeighborExchange", "psum_with_error_feedback", "quantized_psum",
+]

@@ -1,0 +1,288 @@
+"""Residual-driven adaptive bit-width control (AdaQP-style, gradient-free).
+
+The paper's pdADMM-G-Q picks one bit-width offline and keeps it for the whole
+run. AdaQP showed that assigning bit-widths *per message at runtime* recovers
+more bandwidth at the same accuracy. Here the control signal is the per-layer
+ADMM primal residual ``r_l = ||p_{l+1} - q_l||`` that `core/pdadmm.py`
+already computes: while a layer's residual is near its peak, the constraint
+is loose and coarse wire noise is masked (few bits suffice); as the residual
+contracts, the exchange graduates to finer grids so quantization error never
+dominates the remaining constraint violation.
+
+Design constraints honored here:
+
+  * **Static bit-widths per compiled step.** Bit-width is a small static enum
+    (`allowed_bits`); a schedule change means a different (cached) jit
+    specialization, so hysteresis + dwell bound the number of recompiles to
+    ~len(allowed_bits) per edge over a run, not O(iterations).
+  * **Global byte budget.** Given a total-byte budget for the managed edges,
+    the controller demotes the loosest (highest-residual) edges first until
+    the projected per-iteration spend fits the remaining budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    allowed_bits: Tuple[int, ...] = (4, 8, 16)
+    min_bits: int = 4
+    max_bits: int = 16
+    # peak-normalized residual ratio ABOVE threshold -> that bit-width;
+    # below every threshold -> max_bits. Sorted descending by threshold.
+    thresholds: Tuple[Tuple[float, int], ...] = ((0.30, 4), (0.06, 8))
+    hysteresis: float = 0.2    # relative ratio margin required to switch
+    min_dwell: int = 3         # iterations an edge must hold its bit-width
+    byte_budget: Optional[float] = None   # total bytes for managed edges
+    total_iters: Optional[int] = None     # needed when byte_budget is set
+    # "global": every edge follows the summed residual's phase (coarse while
+    # training is in flux, fine as it converges); per-edge differentiation
+    # then comes only from budget-aware promotion staggering. "per_edge":
+    # each edge normalizes against its own peak — sharper differentiation,
+    # but an edge that never becomes active (peak ~ 0) reads as permanently
+    # "at peak" and stays pinned at min_bits, which persists its projection
+    # error for the whole run. Global is the accuracy-safe default.
+    signal: str = "global"
+
+    def clamp(self, bits: int) -> int:
+        bits = min(max(bits, self.min_bits), self.max_bits)
+        legal = [b for b in sorted(self.allowed_bits)
+                 if self.min_bits <= b <= self.max_bits]
+        # nearest legal value at or above the request (never under-deliver
+        # precision except at the top of the range)
+        for b in legal:
+            if b >= bits:
+                return b
+        return legal[-1]
+
+
+class BitWidthController:
+    """Assigns a bit-width to each managed edge every iteration.
+
+    `edge_elements[i]` is the number of quantized payload elements edge *i*
+    moves per iteration (used for budget projection; e.g. a pdADMM boundary
+    moving q forward and p backward manages ``2 * V * n_l`` elements).
+    """
+
+    def __init__(self, edge_elements: Sequence[int],
+                 config: ControllerConfig = ControllerConfig()):
+        if config.byte_budget is not None and not config.total_iters:
+            raise ValueError("byte_budget requires total_iters")
+        if not [b for b in config.allowed_bits
+                if config.min_bits <= b <= config.max_bits]:
+            raise ValueError(
+                f"no allowed_bits {config.allowed_bits} inside "
+                f"[min_bits={config.min_bits}, max_bits={config.max_bits}]")
+        self.config = config
+        self.edge_elements = [int(e) for e in edge_elements]
+        n = len(self.edge_elements)
+        self._bits: List[int] = [config.clamp(config.min_bits)] * n
+        self._peak: List[float] = [0.0] * n
+        self._global_peak: float = 0.0
+        self._last_switch: List[int] = [-config.min_dwell] * n
+        self.spent_bytes: float = 0.0
+        self.n_switches: int = 0
+
+    # -- policy ------------------------------------------------------------
+    def _desired(self, ratio: float) -> int:
+        for thr, bits in sorted(self.config.thresholds, reverse=True):
+            if ratio > thr:
+                return self.config.clamp(bits)
+        return self.config.clamp(self.config.max_bits)
+
+    def _edge_bytes(self, i: int, bits: int) -> float:
+        return math.ceil(self.edge_elements[i] * bits / 8)
+
+    def _legal(self) -> List[int]:
+        cfg = self.config
+        return sorted(b for b in cfg.allowed_bits
+                      if cfg.min_bits <= b <= cfg.max_bits)
+
+    def _per_iter_budget(self, iteration: int) -> Optional[float]:
+        cfg = self.config
+        if cfg.byte_budget is None:
+            return None
+        iters_left = max(cfg.total_iters - iteration, 1)
+        return max(cfg.byte_budget - self.spent_bytes, 0.0) / iters_left
+
+    def _projected(self) -> float:
+        return sum(self._edge_bytes(i, b) for i, b in enumerate(self._bits))
+
+    def assign(self, residuals: Sequence[float], iteration: int
+               ) -> Tuple[int, ...]:
+        """One control step: residuals -> per-edge bit-widths."""
+        cfg = self.config
+        assert len(residuals) == len(self.edge_elements)
+        per_iter = self._per_iter_budget(iteration)
+        legal = self._legal()
+        g = sum(float(r) for r in residuals)
+        self._global_peak = max(self._global_peak, g)
+        g_ratio = g / self._global_peak if self._global_peak > 0 else 1.0
+        for i, r in enumerate(residuals):
+            r = float(r)
+            self._peak[i] = max(self._peak[i], r)
+            if cfg.signal == "global":
+                ratio = g_ratio
+            else:
+                ratio = r / self._peak[i] if self._peak[i] > 0 else 1.0
+            desired = self._desired(ratio)
+            cur = self._bits[i]
+            if desired == cur:
+                continue
+            if iteration - self._last_switch[i] < cfg.min_dwell:
+                continue
+            # hysteresis: the decision must survive a +/- margin on the ratio
+            margin = 1.0 + cfg.hysteresis
+            if desired > cur and self._desired(ratio * margin) <= cur:
+                continue
+            if desired < cur and self._desired(ratio / margin) >= cur:
+                continue
+            if desired > cur and per_iter is not None:
+                # budget-aware promotion: take the largest affordable step so
+                # we never promote into an immediate budget demotion (which
+                # would thrash schedules and defeat hysteresis)
+                head = per_iter - self._projected()
+                afford = [b for b in legal if cur < b <= desired and
+                          self._edge_bytes(i, b) - self._edge_bytes(i, cur)
+                          <= head]
+                if not afford:
+                    continue
+                desired = afford[-1]
+            self._bits[i] = desired
+            self._last_switch[i] = iteration
+            self.n_switches += 1
+
+        self._enforce_budget(iteration)
+        self.spent_bytes += self._projected()
+        return tuple(self._bits)
+
+    def _enforce_budget(self, iteration: int) -> None:
+        """Safety net for a shrinking budget (promotions are already
+        budget-aware): demote the loosest edges until the projection fits."""
+        per_iter = self._per_iter_budget(iteration)
+        if per_iter is None:
+            return
+        legal = self._legal()
+        while self._projected() > per_iter:
+            # demote the edge spending the most that can still step down
+            cand = [(self._edge_bytes(i, b), i) for i, b in
+                    enumerate(self._bits) if b > legal[0]]
+            if not cand:
+                break
+            _, i = max(cand)
+            below = [b for b in legal if b < self._bits[i]]
+            self._bits[i] = below[-1]
+            self._last_switch[i] = iteration
+            self.n_switches += 1
+
+    @property
+    def schedule(self) -> Tuple[int, ...]:
+        return tuple(self._bits)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive single-host training loop (the Fig-5 wire model, now per-layer
+# per-iteration bit-widths). The distributed stage-parallel runtime reuses
+# the same controller with a single managed edge (SPMD programs need one
+# uniform wire format per step — see parallel/stage_parallel.py).
+# ---------------------------------------------------------------------------
+
+def admm_edges(dims, V: int) -> List[int]:
+    """Managed-edge element counts for `train_adaptive`: per boundary l, one
+    p/q edge (q_l forward + p_{l+1} backward: 2*V*n_l elements) followed by
+    one u edge (u_l forward: V*n_l elements)."""
+    n_bound = len(dims) - 2
+    return ([2 * V * dims[l + 1] for l in range(n_bound)] +
+            [V * dims[l + 1] for l in range(n_bound)])
+
+
+def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
+                   controller: BitWidthController, ledger,
+                   grids_by_bits: Dict[int, "object"]):
+    """pdADMM-G-Q training with the controller assigning each boundary's
+    p/q — and, with `admm_edges`-shaped controllers, u — exchange a
+    bit-width every iteration; every payload goes on the ledger. Returns
+    (state, hist) like ``pdadmm.train``.
+
+    The p/q wire is the optimization grid itself (projection = prox of the
+    grid indicator, as in the paper); the u wire is a per-payload affine
+    codec applied to the *transmitted view* of the dual (the stored dual
+    stays exact, Lemma 4 untouched). With a controller built over only the
+    p/q edges (legacy layout), u stays fp32.
+
+    Compiled-step cache is keyed by the bit schedule: hysteresis bounds the
+    number of distinct schedules, hence the number of recompiles.
+    """
+    from repro.comm import ledger as ledger_mod
+    from repro.comm.codecs import FP32, AffineCodec, GridCodec
+    from repro.core import pdadmm
+
+    L = len(dims) - 1
+    V = X.shape[0]
+    n_bound = L - 1
+    manage_u = len(controller.edge_elements) == 2 * n_bound
+    assert manage_u or len(controller.edge_elements) == n_bound
+
+    # init on the grid the first iterations will actually train on (the
+    # initial schedule's bit-width, but never coarser than 8): a coarser
+    # projection at init breaks the forward-consistency the residual-driven
+    # schedule needs as its reference point, and a finer one needlessly
+    # departs from the fixed-bit trajectory it should match early on.
+    init_bits = max(controller.schedule[0],
+                    min(8, max(grids_by_bits)))
+    init_grid = grids_by_bits.get(init_bits,
+                                  grids_by_bits[max(grids_by_bits)])
+    state = pdadmm.init_state(
+        key, X, dims, dataclasses.replace(config, quantize_p=True,
+                                          quantize_q=True, grid=init_grid))
+
+    step_cache = {}
+
+    def split(schedule):
+        pq = schedule[:n_bound]
+        uu = schedule[n_bound:] if manage_u else None
+        return pq, uu
+
+    def step_for(schedule):
+        if schedule not in step_cache:
+            pq, uu = split(schedule)
+            p_grids = tuple([None] + [grids_by_bits[b] for b in pq])
+            q_grids = tuple(grids_by_bits[b] for b in pq)
+            u_codecs = (tuple(AffineCodec(b) for b in uu)
+                        if uu is not None else None)
+            step_cache[schedule] = jax.jit(functools.partial(
+                pdadmm.iterate, config=config, p_grids=p_grids,
+                q_grids=q_grids, u_codecs=u_codecs))
+        return step_cache[schedule]
+
+    hist = {"objective": [], "residual": [], "val_acc": [], "test_acc": [],
+            "schedules": []}
+    bound_res = [0.0] * n_bound
+    for e in range(epochs):
+        residuals = bound_res + bound_res if manage_u else bound_res
+        sched = controller.assign(residuals, e)
+        hist["schedules"].append(sched)
+        state, m = step_for(sched)(state, X, labels, masks["train"])
+        # primal + dual residual per boundary: the primal part collapses to 0
+        # once p and q share a grid, the dual part keeps decaying with actual
+        # convergence progress — their sum drives the bit-width everywhere.
+        bound_res = [float(r) + float(s) for r, s in
+                     zip(m["layer_residuals"], m["layer_dual_residuals"])]
+        pq, uu = split(sched)
+        codecs = [GridCodec(grids_by_bits[b]) for b in pq]
+        u_codecs = ([AffineCodec(b) for b in uu] if uu is not None else FP32)
+        ledger_mod.record_admm_iteration(ledger, e, dims, V, codecs, codecs,
+                                         u_codecs)
+        hist["objective"].append(float(m["objective"]))
+        hist["residual"].append(float(m["residual"]))
+    hist["val_acc"].append(float(pdadmm.forward_accuracy(
+        state, X, labels, masks["val"])))
+    hist["test_acc"].append(float(pdadmm.forward_accuracy(
+        state, X, labels, masks["test"])))
+    return state, hist

@@ -1,0 +1,128 @@
+"""CommLedger — the single source of truth for bytes-on-the-wire.
+
+Every payload that crosses a link is recorded here: neighbor ``ppermute``
+shifts, quantized ``psum`` payloads, and the scalar min/max handshakes of the
+shared-scale all-reduce. Records carry *exact* byte counts from the codec
+(`payload_bytes` includes headers and int4 packing), so benchmarks and the
+bit-width controller read totals from one place instead of re-deriving
+formulas.
+
+Accounting model: bytes are what the codec emits per logical payload. The
+int32 in-flight accumulator XLA may use inside a code-``psum`` ring is an
+implementation detail and is not charged; the scalar handshake of the
+shared-scale path IS charged (8 bytes) because it is a real extra message.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class WireRecord:
+    iteration: int
+    edge: str            # e.g. "q_fwd/l3", "grad_psum/W0"
+    kind: str            # "ppermute" | "psum" | "handshake"
+    elements: int
+    bits: int
+    payload_bytes: int   # exact: body (packed/container) + header
+
+
+class CommLedger:
+    """Append-only wire-byte ledger with per-iteration / per-edge rollups."""
+
+    def __init__(self):
+        self.records: List[WireRecord] = []
+
+    # -- recording ---------------------------------------------------------
+    def record(self, iteration: int, edge: str, kind: str, elements: int,
+               bits: int, payload_bytes: Optional[int] = None) -> WireRecord:
+        if payload_bytes is None:  # logical size, no header
+            payload_bytes = math.ceil(elements * bits / 8)
+        rec = WireRecord(iteration, edge, kind, int(elements), int(bits),
+                         int(payload_bytes))
+        self.records.append(rec)
+        return rec
+
+    def record_payload(self, iteration: int, edge: str, kind: str, codec,
+                       shape: Sequence[int]) -> WireRecord:
+        """Record one codec-formatted payload of a given (static) shape."""
+        n = int(math.prod(int(s) for s in shape))
+        return self.record(iteration, edge, kind, n, codec.bits,
+                           codec.payload_bytes(shape))
+
+    def record_handshake(self, iteration: int, edge: str,
+                         n_scalars: int = 2) -> WireRecord:
+        """Scalar fp32 exchange (e.g. shared min/max for a psum grid)."""
+        return self.record(iteration, edge, "handshake", n_scalars, 32,
+                           4 * n_scalars)
+
+    # -- rollups -----------------------------------------------------------
+    def total_bytes(self) -> int:
+        return sum(r.payload_bytes for r in self.records)
+
+    def iteration_bytes(self, iteration: int) -> int:
+        return sum(r.payload_bytes for r in self.records
+                   if r.iteration == iteration)
+
+    def per_iteration(self) -> Dict[int, int]:
+        out: Dict[int, int] = defaultdict(int)
+        for r in self.records:
+            out[r.iteration] += r.payload_bytes
+        return dict(out)
+
+    def per_edge(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for r in self.records:
+            out[r.edge] += r.payload_bytes
+        return dict(out)
+
+    def baseline_fp32_bytes(self) -> int:
+        """What the same traffic would cost uncompressed (handshakes are an
+        artifact of compression, so they count 0 in the baseline)."""
+        return sum(4 * r.elements for r in self.records
+                   if r.kind != "handshake")
+
+    def savings_vs_fp32(self) -> float:
+        base = self.baseline_fp32_bytes()
+        return 1.0 - self.total_bytes() / base if base else 0.0
+
+    def summary(self) -> Dict:
+        its = self.per_iteration()
+        return {
+            "total_bytes": self.total_bytes(),
+            "baseline_fp32_bytes": self.baseline_fp32_bytes(),
+            "savings_vs_fp32": self.savings_vs_fp32(),
+            "iterations": len(its),
+            "bytes_per_iteration": (self.total_bytes() / len(its)) if its
+            else 0.0,
+            "by_edge": self.per_edge(),
+        }
+
+    def merge(self, other: "CommLedger") -> "CommLedger":
+        self.records.extend(other.records)
+        return self
+
+
+def record_admm_iteration(ledger: CommLedger, iteration: int, dims, V: int,
+                          p_codecs, q_codecs, u_codec=None) -> None:
+    """Record one pdADMM-G iteration of layer-client traffic (Fig-5 wire
+    model): per boundary l<->l+1, q_l forward, u_l forward, p_{l+1} backward.
+
+    `p_codecs`/`q_codecs`/`u_codec` are either one codec for every boundary
+    or a sequence with one codec per boundary (the adaptive schedule case).
+    """
+    from repro.comm.codecs import FP32
+    u_codec = FP32 if u_codec is None else u_codec
+    n_bound = len(dims) - 2
+    per = lambda c, l: c[l] if isinstance(c, (list, tuple)) else c
+    for l in range(n_bound):
+        shape = (V, dims[l + 1])
+        ledger.record_payload(iteration, f"q_fwd/l{l}", "ppermute",
+                              per(q_codecs, l), shape)
+        ledger.record_payload(iteration, f"u_fwd/l{l}", "ppermute",
+                              per(u_codec, l), shape)
+        ledger.record_payload(iteration, f"p_bwd/l{l}", "ppermute",
+                              per(p_codecs, l), shape)

@@ -1,0 +1,156 @@
+"""Transport entry points: every collective whose payload crosses a link.
+
+``parallel/stage_parallel.py`` (neighbor ppermute shifts) and
+``parallel/collectives.py`` (quantized all-reduce) call these instead of
+hand-rolling encode/decode. All functions are pure and trace-safe — byte
+accounting happens OUTSIDE jit via the `wire_bytes`/`psum_wire_bytes`
+helpers, which the runtimes feed to a :class:`~repro.comm.ledger.CommLedger`
+using the same static shapes the traced program saw.
+
+Shared-scale all-reduce model (unchanged math from the original
+collectives.py): a scalar min/max handshake fixes ONE affine grid across
+shards, the integer codes are summed exactly in int32, and the only lossy
+step is each shard's rounding (unbiased under stochastic rounding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codecs import (FP32, AffineCodec, Fp32Codec, GridCodec,
+                               WireCodec)
+
+
+def axis_size(axis_name: str):
+    """`jax.lax.axis_size` compat (older JAX exposes it via core.axis_frame,
+    which returns the static size directly)."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:
+        return jax.core.axis_frame(axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Neighbor exchange (pipeline/stage ring)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NeighborExchange:
+    """Codec-formatted boundary exchange over a ring axis.
+
+    The payload is the boundary slab only (one layer of the local stack);
+    interior layers move by a local roll, exactly as in the paper's
+    layer-client pipeline.
+    """
+
+    axis_name: str
+    codec: WireCodec = FP32
+
+    def _permute(self, x, perm):
+        payload = self.codec.encode(x)
+        moved = jax.tree.map(
+            lambda t: jax.lax.ppermute(t, self.axis_name, perm), payload)
+        return self.codec.decode(moved, shape=x.shape, dtype=x.dtype)
+
+    def shift_from_prev(self, x_loc):
+        """out[i] = x[i-1]; out[0] fetched from the previous stage (garbage
+        into global layer 0 — masked by the caller)."""
+        n = axis_size(self.axis_name)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        boundary = self._permute(x_loc[-1:], perm)
+        return jnp.concatenate([boundary, x_loc[:-1]], axis=0)
+
+    def shift_from_next(self, x_loc):
+        """out[i] = x[i+1]; out[-1] fetched from the next stage (garbage into
+        global layer L-1 — masked by the caller)."""
+        n = axis_size(self.axis_name)
+        perm = [(i, (i - 1) % n) for i in range(n)]
+        boundary = self._permute(x_loc[:1], perm)
+        return jnp.concatenate([x_loc[1:], boundary], axis=0)
+
+    def wire_bytes(self, boundary_shape) -> int:
+        """Exact bytes one shift puts on one link."""
+        return self.codec.payload_bytes(boundary_shape)
+
+
+# ---------------------------------------------------------------------------
+# Quantized all-reduce (data-parallel axis)
+# ---------------------------------------------------------------------------
+
+def _shared_affine(x, axis_name: str, codec: AffineCodec):
+    """Scalar min/max handshake -> one affine grid for every shard."""
+    lo = jax.lax.pmin(jnp.min(x), axis_name)
+    hi = jax.lax.pmax(jnp.max(x), axis_name)
+    scale = jnp.maximum((hi - lo) / (2 ** codec.bits - 1), 1e-12)
+    return lo, scale
+
+
+def _grid_codes(grid, x, key):
+    """Integer codes on a static grid; stochastic rounding iff `key` given
+    (the subsystem-wide rule, same as AffineCodec.quantize)."""
+    q = (x - grid.lo) / grid.step
+    if key is not None:
+        q = jnp.floor(q + jax.random.uniform(key, q.shape))
+    else:
+        q = jnp.round(q)
+    return jnp.clip(q, 0, grid.n_levels - 1)
+
+
+def _shared_codes(x, axis_name, codec, key):
+    """Integer codes against the grid EVERY shard shares: (codes, zero,
+    scale). Static for GridCodec; min/max handshake for AffineCodec."""
+    if isinstance(codec, GridCodec):
+        g = codec.grid
+        return _grid_codes(g, x, key), g.lo, g.step
+    lo, scale = _shared_affine(x, axis_name, codec)
+    return codec.quantize(x, lo, scale, key=key), lo, scale
+
+
+def _code_psum(codes, zero, scale, axis_name):
+    """Exact int32 code-sum; decode is ``scale * code_sum + n * zero``."""
+    n = jax.lax.psum(1, axis_name)
+    code_sum = jax.lax.psum(codes.astype(jnp.int32), axis_name)
+    return code_sum.astype(jnp.float32) * scale + n * zero
+
+
+def quantized_psum(x, axis_name: str, codec: WireCodec = AffineCodec(8), *,
+                   key: Optional[jax.Array] = None):
+    """psum(x) with the payload formatted by `codec`.
+
+    The integer code-sum is exact in int32. fp32 codec degrades to a plain
+    psum. Rounding is unbiased stochastic iff `key` is supplied.
+    """
+    if isinstance(codec, Fp32Codec):
+        return jax.lax.psum(x, axis_name)
+    codes, zero, scale = _shared_codes(x, axis_name, codec, key)
+    return _code_psum(codes, zero, scale, axis_name)
+
+
+def psum_with_error_feedback(x, err, axis_name: str,
+                             codec: WireCodec = AffineCodec(8), *,
+                             key: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Compressed psum of (x + carried error); returns (summed, new_error).
+
+    new_error = target - what this shard actually transmitted (exact, since
+    the grid is shared): cumulative bias stays bounded by one round's error.
+    """
+    target = x + err
+    if isinstance(codec, Fp32Codec):
+        return jax.lax.psum(target, axis_name), jnp.zeros_like(target)
+    codes, zero, scale = _shared_codes(target, axis_name, codec, key)
+    sent = codes * scale + zero
+    return _code_psum(codes, zero, scale, axis_name), target - sent
+
+
+def psum_wire_bytes(codec: WireCodec, shape) -> Tuple[int, int]:
+    """(payload_bytes, handshake_bytes) one shard contributes to one
+    compressed psum of `shape`. The shared-scale path carries NO per-payload
+    header (that is the point of the handshake), so the affine body is
+    charged without it and the scalar min/max handshake is charged once."""
+    body = codec.payload_bytes(shape) - codec.header_bytes()
+    handshake = 8 if isinstance(codec, AffineCodec) else 0
+    return body, handshake

@@ -86,32 +86,53 @@ def init_state(key, X, dims: Sequence[int], config: ADMMConfig) -> ADMMState:
 
 
 def iterate(state: ADMMState, X, labels, label_mask,
-            config: ADMMConfig) -> tuple:
+            config: ADMMConfig, p_grids: Optional[tuple] = None,
+            q_grids: Optional[tuple] = None,
+            u_codecs: Optional[tuple] = None) -> tuple:
     """One full Algorithm-1 iteration. Returns (new_state, metrics dict).
 
     NOTE the k/k+1 bookkeeping: within an iteration the updates are
     sequential across *variable families* (p then W then b then z then q
     then u) but parallel across layers within each family.
+
+    `p_grids` (length L, entry 0 unused) / `q_grids` (length L-1) give each
+    layer its own quantization grid — the adaptive bit-width controller
+    (repro.comm.controller) re-derives them every schedule change. When
+    omitted, every layer uses `config.grid` (the paper's fixed setting).
+
+    `u_codecs` (length L-1) quantizes the *transmitted view* of each dual
+    u_l consumed by layer l+1's p/W updates (the forward u wire, fp32 in the
+    paper). The stored dual stays exact — Lemma 4 is untouched; only what
+    crosses the link is coarsened.
     """
     nu, rho = config.nu, config.rho
-    p_grid = config.grid if config.quantize_p else None
-    q_grid = config.grid if config.quantize_q else None
     L = len(state.W)
+    if p_grids is None:
+        p_grids = (config.grid if config.quantize_p else None,) * L
+    if q_grids is None:
+        q_grids = (config.grid if config.quantize_q else None,) * (L - 1)
 
     p, W, b, z, q, u = (list(state.p), list(state.W), list(state.b),
                         list(state.z), list(state.q), list(state.u))
     tau, theta = list(state.tau), list(state.theta)
 
+    if u_codecs is None:
+        u_wire = u
+    else:
+        from repro.comm.codecs import fake_quantize
+        u_wire = [ul if c is None else fake_quantize(c, ul)
+                  for c, ul in zip(u_codecs, u)]
+
     # ---- p-updates (l = 1..L-1), parallel across layers -----------------
     for l in range(1, L):
         p[l], tau[l] = sp.update_p(
-            p[l], W[l], b[l], z[l], q[l - 1], u[l - 1], nu, rho,
-            tau[l] * config.backtrack_decay + 1e-6, grid=p_grid)
+            p[l], W[l], b[l], z[l], q[l - 1], u_wire[l - 1], nu, rho,
+            tau[l] * config.backtrack_decay + 1e-6, grid=p_grids[l])
 
     # ---- W-updates -------------------------------------------------------
     for l in range(L):
         qp = q[l - 1] if l > 0 else None
-        up = u[l - 1] if l > 0 else None
+        up = u_wire[l - 1] if l > 0 else None
         W[l], theta[l] = sp.update_W(
             p[l], W[l], b[l], z[l], qp, up, nu, rho,
             theta[l] * config.backtrack_decay + 1e-6, first=(l == 0))
@@ -129,19 +150,35 @@ def iterate(state: ADMMState, X, labels, label_mask,
                                 config.fista_iters)
 
     # ---- q-updates ----------------------------------------------------------
+    dual_res = []
     for l in range(L - 1):
-        q[l] = sp.update_q(p[l + 1], u[l], relu(z[l]), nu, rho, grid=q_grid)
+        q[l] = sp.update_q(p[l + 1], u[l], relu(z[l]), nu, rho,
+                           grid=q_grids[l])
+        # ADMM dual residual s_l = rho ||q^{k+1} - q^k|| (Boyd §3.3): decays
+        # as the iterate settles, at ANY grid resolution — unlike the primal
+        # residual, which collapses to exactly 0 once p and q share a grid.
+        dual_res.append(rho * jnp.linalg.norm(q[l] - state.q[l]))
 
     # ---- dual updates + residuals --------------------------------------------
     res_sq = jnp.float32(0.0)
+    layer_res = []
     for l in range(L - 1):
         u[l], r = sp.update_u(u[l], p[l + 1], q[l], rho)
-        res_sq = res_sq + jnp.vdot(r, r)
+        rsq = jnp.vdot(r, r)
+        res_sq = res_sq + rsq
+        layer_res.append(jnp.sqrt(rsq))
 
     new = ADMMState(p, W, b, z, q, u, tau, theta)
     metrics = {
         "objective": lagrangian(new, labels, label_mask, config),
         "residual": jnp.sqrt(res_sq),
+        # per-boundary primal ||p_{l+1} - q_l|| and dual rho||q^{k+1} - q^k||
+        # residuals: the control signals for the adaptive bit-width
+        # controller (repro.comm.controller)
+        "layer_residuals": (jnp.stack(layer_res) if layer_res
+                            else jnp.zeros((0,), jnp.float32)),
+        "layer_dual_residuals": (jnp.stack(dual_res) if dual_res
+                                 else jnp.zeros((0,), jnp.float32)),
     }
     return new, metrics
 

@@ -6,8 +6,11 @@ Two grid families, both from the paper's Section V:
 
 ``project`` is the prox of the indicator I(p ∈ Δ) — the only change the
 Q-variant makes to the p-subproblem. ``encode``/``decode`` model the wire
-format (integer codes of ceil(log2 m) bits) for communication accounting and
-for the quantized collective payloads of the distributed runtime.
+format (integer codes of ceil(log2 m) bits).
+
+This module owns the *optimization-side* grid math (projection is part of
+the ADMM subproblems). Everything wire-side — codec protocol, byte
+accounting, packing, error feedback, transport — lives in ``repro.comm``.
 """
 from __future__ import annotations
 
@@ -74,24 +77,24 @@ def calibrated_grid(bits: int, x, margin: float = 0.0) -> QuantGrid:
 
 
 # ---------------------------------------------------------------------------
-# Stochastic-rounding affine int8 codec for quantized collectives
-# (beyond-paper: the paper's trick applied to DP gradient all-reduce)
+# Stochastic-rounding affine codec for quantized collectives. The canonical
+# wire implementation lives in repro.comm.codecs.AffineCodec; these wrappers
+# keep the historical (codes, scale, zero) tuple API and generalize it to
+# per-`axis` (blockwise) calibration. Lazy import: core must stay importable
+# without the comm runtime.
 # ---------------------------------------------------------------------------
 
 def affine_encode(x, bits: int = 8, axis=None, key: Optional[jax.Array] = None):
     """Per-tensor (or per-`axis`) affine quantization. Returns (codes, scale, zero)."""
+    from repro.comm.codecs import AffineCodec, _container_dtype
+    codec = AffineCodec(bits)
     lo = jnp.min(x, axis=axis, keepdims=axis is not None)
     hi = jnp.max(x, axis=axis, keepdims=axis is not None)
-    n = 2 ** bits - 1
-    scale = jnp.maximum((hi - lo) / n, 1e-12)
-    q = (x - lo) / scale
-    if key is not None:  # stochastic rounding (unbiased)
-        q = jnp.floor(q + jax.random.uniform(key, q.shape))
-    else:
-        q = jnp.round(q)
-    codes = jnp.clip(q, 0, n).astype(jnp.uint8 if bits <= 8 else jnp.uint16)
+    scale = jnp.maximum((hi - lo) / (2 ** bits - 1), 1e-12)
+    codes = codec.quantize(x, lo, scale, key=key).astype(_container_dtype(bits))
     return codes, scale, lo
 
 
 def affine_decode(codes, scale, zero, dtype=jnp.float32):
-    return (codes.astype(jnp.float32) * scale + zero).astype(dtype)
+    from repro.comm.codecs import AffineCodec
+    return AffineCodec().dequantize(codes, zero, scale, dtype)

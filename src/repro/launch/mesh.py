@@ -3,16 +3,33 @@
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state — device count is locked at first jax init, and only
 ``launch/dryrun.py`` is allowed to force 512 host devices.
+
+``AxisType`` only exists in newer JAX releases; on older installs
+``jax.make_mesh`` has no ``axis_types`` parameter and every axis is already
+"auto", so the compat path simply omits the argument. All callers (including
+tests and examples) should go through :func:`compat_make_mesh` rather than
+importing ``AxisType`` themselves.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # JAX >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # older JAX: axes are implicitly auto
+    AxisType = None
 
 
-def _mk(shape, axes, devices=None):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+def compat_make_mesh(shape, axes, devices=None):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes),
+                             devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+_mk = compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

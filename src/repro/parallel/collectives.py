@@ -1,73 +1,39 @@
-"""Quantized collectives + error feedback.
+"""Quantized collectives + error feedback (thin façade over repro.comm).
 
 The paper quantizes the *model-parallel* neighbor exchange. The same trick
 generalized (beyond paper) to the *data-parallel* gradient all-reduce:
-int8 stochastic-rounding encode, psum of codes in int32, decode — with an
+stochastic-rounding encode, psum of codes in int32, decode — with an
 error-feedback residual so compression noise doesn't bias convergence
 (Terngrad-family [8] behaviour, gradient-free setting here).
+
+All wire formatting lives in :mod:`repro.comm.codecs` /
+:mod:`repro.comm.transport`; this module only keeps the historical
+bits-based entry points and the pytree convenience wrapper.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.quantize import affine_decode, affine_encode
-
-
-def _shared_affine(x, axis_name: str, bits: int):
-    """Two-phase shared-scale affine params: a scalar min/max exchange (8
-    bytes on the wire) so every shard encodes against the SAME grid — the
-    int32 code-sum then decodes exactly."""
-    lo = jax.lax.pmin(jnp.min(x), axis_name)
-    hi = jax.lax.pmax(jnp.max(x), axis_name)
-    n_lvl = 2 ** bits - 1
-    scale = jnp.maximum((hi - lo) / n_lvl, 1e-12)
-    return lo, scale, n_lvl
+from repro.comm import transport
+from repro.comm.codecs import AffineCodec
 
 
 def quantized_psum(x, axis_name: str, *, bits: int = 8,
                    key: Optional[jax.Array] = None):
-    """psum(x) with the payload quantized to `bits`.
-
-    Phase 1: scalar min/max exchange -> shared grid. Phase 2: int code psum
-    (exact in int32). Decode: code_sum * scale + n * lo. The only lossy step
-    is the per-shard rounding (unbiased under stochastic rounding)."""
-    lo, scale, n_lvl = _shared_affine(x, axis_name, bits)
-    q = (x - lo) / scale
-    if key is not None:
-        q = jnp.floor(q + jax.random.uniform(key, q.shape))
-    else:
-        q = jnp.round(q)
-    codes = jnp.clip(q, 0, n_lvl)
-    n = jax.lax.psum(1, axis_name)
-    code_sum = jax.lax.psum(codes.astype(jnp.int32), axis_name)
-    return code_sum.astype(jnp.float32) * scale + n * lo
+    """psum(x) with the payload quantized to `bits` (shared-scale affine:
+    scalar min/max handshake, exact int32 code-sum, one lossy rounding;
+    unbiased stochastic rounding iff `key` is supplied)."""
+    return transport.quantized_psum(x, axis_name, AffineCodec(bits), key=key)
 
 
 def psum_with_error_feedback(grad, err, axis_name: str, *, bits: int = 8,
                              key: Optional[jax.Array] = None
                              ) -> Tuple[jax.Array, jax.Array]:
-    """Compressed psum of (grad + carried error); returns (summed, new_error).
-
-    new_error = target - what this shard actually transmitted (exact, since
-    the grid is shared): cumulative bias stays bounded by one round's error.
-    """
-    target = grad + err
-    lo, scale, n_lvl = _shared_affine(target, axis_name, bits)
-    q = (target - lo) / scale
-    if key is not None:
-        q = jnp.floor(q + jax.random.uniform(key, q.shape))
-    else:
-        q = jnp.round(q)
-    codes = jnp.clip(q, 0, n_lvl)
-    sent = codes * scale + lo
-    new_err = target - sent
-    n = jax.lax.psum(1, axis_name)
-    code_sum = jax.lax.psum(codes.astype(jnp.int32), axis_name)
-    total = code_sum.astype(jnp.float32) * scale + n * lo
-    return total, new_err
+    """Compressed psum of (grad + carried error); returns (summed, new_error)."""
+    return transport.psum_with_error_feedback(grad, err, axis_name,
+                                              AffineCodec(bits), key=key)
 
 
 def compressed_grad_tree(grads, errs, axis_name: str, *, bits: int = 8):

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm.codecs import FP32, WireCodec, codec_for_grid
+from repro.comm.transport import NeighborExchange
 from repro.core import subproblems as sp
 from repro.core.pdadmm import ADMMConfig, relu
 from repro.core.quantize import QuantGrid
@@ -68,35 +70,24 @@ def init_stack(key, Xp, L: int, config: ADMMConfig) -> StackState:
 
 
 # ---------------------------------------------------------------------------
-# Neighbor exchange: local roll + boundary ppermute, quantized on the wire
+# Neighbor exchange: local roll + boundary ppermute. ALL wire formatting goes
+# through repro.comm (codec-formatted NeighborExchange); these wrappers only
+# keep the historical grid-based signature alive for external callers.
 # ---------------------------------------------------------------------------
-
-def _wire(x, grid: Optional[QuantGrid], fn):
-    """Encode -> fn (the communication) -> decode. With no grid: fp32 wire."""
-    if grid is None:
-        return fn(x)
-    return grid.decode(fn(grid.encode(x)), dtype=x.dtype)
-
 
 def shift_from_prev(x_loc, axis_name: str, grid: Optional[QuantGrid] = None):
     """Per local stack [M,V,h]: return previous layer's value per layer:
     out[i] = x[i-1], with x[-1] fetched from the previous stage (garbage into
     global layer 0, which is masked by the caller)."""
-    n = jax.lax.axis_size(axis_name)
-    perm = [(i, (i + 1) % n) for i in range(n)]
-    boundary = _wire(x_loc[-1:],  grid,
-                     lambda t: jax.lax.ppermute(t, axis_name, perm))
-    return jnp.concatenate([boundary, x_loc[:-1]], axis=0)
+    return NeighborExchange(axis_name, codec_for_grid(grid)) \
+        .shift_from_prev(x_loc)
 
 
 def shift_from_next(x_loc, axis_name: str, grid: Optional[QuantGrid] = None):
     """out[i] = x[i+1]; x[M] fetched from the next stage (garbage into global
     layer L-1, masked by the caller)."""
-    n = jax.lax.axis_size(axis_name)
-    perm = [(i, (i - 1) % n) for i in range(n)]
-    boundary = _wire(x_loc[:1], grid,
-                     lambda t: jax.lax.ppermute(t, axis_name, perm))
-    return jnp.concatenate([x_loc[1:], boundary], axis=0)
+    return NeighborExchange(axis_name, codec_for_grid(grid)) \
+        .shift_from_next(x_loc)
 
 
 # ---------------------------------------------------------------------------
@@ -135,16 +126,29 @@ def _fista_last(a, z_old, labels, label_mask, nu, n_classes, n_iters):
 
 def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
                           config: ADMMConfig, *, overlap: bool = False,
-                          donate: bool = False):
+                          donate: bool = False,
+                          p_codec: Optional[WireCodec] = None,
+                          q_codec: Optional[WireCodec] = None):
     """Build the jit-able distributed ADMM iteration.
 
     overlap=True issues the neighbor exchanges BEFORE the W/b/z solves that
     do not consume them (compute/comm overlap — §Perf hillclimb knob; the
     default False is the paper-faithful ordering).
+
+    `p_codec`/`q_codec` override the wire format derived from `config` (the
+    adaptive controller path swaps codecs between cached compilations; the
+    wire format is static per compiled step, so SPMD stages stay uniform).
     """
     nu, rho = config.nu, config.rho
     p_grid = config.grid if config.quantize_p else None
     q_grid = config.grid if config.quantize_q else None
+    if p_codec is None:
+        p_codec = codec_for_grid(p_grid)
+    if q_codec is None:
+        q_codec = codec_for_grid(q_grid)
+    ex_p = NeighborExchange("model", p_codec)
+    ex_q = NeighborExchange("model", q_codec)
+    ex_u = NeighborExchange("model", FP32)
     dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
     n_stages = mesh.shape["model"]
     assert L % n_stages == 0, (L, n_stages)
@@ -162,8 +166,8 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         is_last = (gidx == L - 1)[:, None, None]
 
         # ---- neighbor exchange (prev iteration values) -------------------
-        q_prev = shift_from_prev(st.q, "model", q_grid)
-        u_prev = shift_from_prev(st.u, "model")
+        q_prev = ex_q.shift_from_prev(st.q)
+        u_prev = ex_u.shift_from_prev(st.u)
         q_prev = jnp.where(is_first, 0.0, q_prev)        # layer 0 has no prev
         u_prev = jnp.where(is_first, 0.0, u_prev)
 
@@ -200,7 +204,7 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         z = jnp.where(is_last, z_last, z_hidden)
 
         # ---- q-update (needs p_{l+1} = next layer's NEW p) -------------------
-        p_next = shift_from_next(p, "model", p_grid)
+        p_next = ex_p.shift_from_next(p)
         fz = relu(z)
         q = jax.vmap(sp.update_q, in_axes=(0, 0, 0, None, None, None))(
             p_next, st.u, fz, nu, rho, q_grid)
@@ -240,20 +244,86 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
     return jax.jit(smapped, donate_argnums=(0,) if donate else ()), stack_specs
 
 
+def wire_bytes_per_iteration(mesh, L: int, V: int, h: int,
+                             p_codec: WireCodec, q_codec: WireCodec) -> dict:
+    """Exact global bytes one distributed iteration puts on the stage ring:
+    every stage sends its boundary slab [1, V_loc, h] per data shard — q and
+    u forward, p backward."""
+    n_stages = mesh.shape["model"]
+    assert L % n_stages == 0, (L, n_stages)
+    dp_total = 1
+    for a in ("pod", "data"):
+        dp_total *= mesh.shape.get(a, 1)
+    slab = (1, V // dp_total, h)
+    links = n_stages * dp_total
+    return {
+        "q_fwd": links * q_codec.payload_bytes(slab),
+        "u_fwd": links * FP32.payload_bytes(slab),
+        "p_bwd": links * p_codec.payload_bytes(slab),
+        "slab_elements": (V // dp_total) * h,
+        "links": links,
+    }
+
+
 def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
-                      config: ADMMConfig, epochs: int):
-    """End-to-end stage-parallel training loop (small meshes / tests)."""
+                      config: ADMMConfig, epochs: int, *, ledger=None,
+                      controller=None, grids_by_bits=None):
+    """End-to-end stage-parallel training loop (small meshes / tests).
+
+    With a `ledger`, every iteration's ring traffic is recorded edge-by-edge.
+    With a `controller` (+ `grids_by_bits`), the p/q wire bit-width is chosen
+    each iteration from the global primal residual; SPMD keeps one wire
+    format per compiled step, so schedule changes swap between cached
+    compilations (hysteresis bounds how many exist).
+    """
+    V, h = Xp.shape
     state = init_stack(key, Xp, L, config)
-    step, specs = make_distributed_step(mesh, L, n_classes, config)
     dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    step_cache = {}
+
+    def step_for(bits):
+        if bits not in step_cache:
+            if bits is None:
+                step_cache[bits] = make_distributed_step(
+                    mesh, L, n_classes, config)
+            else:
+                codec = codec_for_grid(grids_by_bits[bits])
+                step_cache[bits] = make_distributed_step(
+                    mesh, L, n_classes, config,
+                    p_codec=codec, q_codec=codec)
+        return step_cache[bits]
+
+    step, specs = step_for(None if controller is None
+                           else controller.schedule[0])
     put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
     state = jax.tree.map(lambda x, s: put(x, s), state, specs)
     Xp_s = put(Xp, P(dp))
     lab = put(labels, P(dp))
     msk = put(masks["train"], P(dp))
-    hist = {"objective": [], "residual": []}
-    for _ in range(epochs):
+    hist = {"objective": [], "residual": [], "schedules": []}
+    residual = 0.0
+    for e in range(epochs):
+        if controller is not None:
+            (bits,) = controller.assign([residual], e)
+            hist["schedules"].append(bits)
+            step, _ = step_for(bits)
+            p_codec = q_codec = codec_for_grid(grids_by_bits[bits])
+        else:
+            p_codec = codec_for_grid(
+                config.grid if config.quantize_p else None)
+            q_codec = codec_for_grid(
+                config.grid if config.quantize_q else None)
         state, m = step(state, Xp_s, lab, msk)
+        residual = float(m["residual"])
         hist["objective"].append(float(m["objective"]))
-        hist["residual"].append(float(m["residual"]))
+        hist["residual"].append(residual)
+        if ledger is not None:
+            wb = wire_bytes_per_iteration(mesh, L, V, h, p_codec, q_codec)
+            n_el = wb["links"] * wb["slab_elements"]
+            ledger.record(e, "q_fwd", "ppermute", n_el, q_codec.bits,
+                          wb["q_fwd"])
+            ledger.record(e, "u_fwd", "ppermute", n_el, 32, wb["u_fwd"])
+            ledger.record(e, "p_bwd", "ppermute", n_el, p_codec.bits,
+                          wb["p_bwd"])
     return state, hist

@@ -53,12 +53,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.ckpt.manager import CheckpointManager
+from repro.launch.mesh import compat_make_mesh
 mgr = CheckpointManager({str(tmp_path)!r}, keep=3)
 tree = {{"w": jnp.arange(8.0).reshape(4, 2)}}
 mgr.save(3, tree)
-mesh = jax.make_mesh((2,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat_make_mesh((2,), ("data",))
 sh = {{"w": NamedSharding(mesh, P("data"))}}
 restored, m = mgr.restore(tree, shardings=sh)
 assert restored["w"].sharding.is_equivalent_to(sh["w"], 2), restored["w"].sharding
