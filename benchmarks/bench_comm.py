@@ -19,7 +19,7 @@ from benchmarks.common import DATASET_SCALES, print_rows, write_csv
 from repro.comm import BitWidthController, CommLedger, ControllerConfig
 from repro.comm.codecs import FP32, codec_for_grid
 from repro.comm.controller import admm_edges, train_adaptive
-from repro.comm.ledger import record_admm_iteration
+from repro.comm.ledger import admm_bytes_per_iteration, record_admm_iteration
 from repro.core import pdadmm
 from repro.core.pdadmm import ADMMConfig
 from repro.graph.datasets import synthetic
@@ -65,9 +65,10 @@ def _run_adaptive(X, ds, dims, epochs):
     # (which includes u at fp32), i.e. strictly better than the paper's
     # best fixed case by construction.
     edges = admm_edges(dims, V)
-    fixed8_total = epochs * pdadmm.comm_bytes_per_iteration(
-        dims, V, ADMMConfig(quantize_p=True, quantize_q=True,
-                            grid=grids[8]))
+    # fixed-8-bit reference spend, from the ledger (the single source of
+    # truth for wire bytes — never a side formula)
+    fixed8_total = epochs * admm_bytes_per_iteration(
+        dims, V, codec_for_grid(grids[8]), codec_for_grid(grids[8]), FP32)
     controller = BitWidthController(edges, ControllerConfig(
         allowed_bits=ADAPTIVE_BITS, min_bits=8, max_bits=16,
         byte_budget=0.75 * fixed8_total, total_iters=epochs))

@@ -1,4 +1,5 @@
-"""Paper Fig 3 + Fig 4: model-parallel speedup.
+"""Paper Fig 3 + Fig 4: model-parallel speedup — plus the repo's own
+layer-update perf ledger (BENCH_speedup.json).
 
 This container has ONE core, so speedup is derived from *measured* per-layer
 update times plus an explicit interconnect model (documented; DESIGN.md §7):
@@ -9,58 +10,146 @@ update times plus an explicit interconnect model (documented; DESIGN.md §7):
   speedup         = T_seq / T_par
 
 t_l is the real measured wall time of layer l's full ADMM update family at
-the true tensor sizes. The same model applied to GD gives the comparison
-curves of Fig 4 (data-parallel GD: compute scales 1/n, but the full gradient
-all-reduces every step: t_comm_gd(n) = 2(n-1)/n · param_bytes / BW).
+the true tensor sizes. Two implementations are timed:
+
+  * before — the pre-fast-path family (`update_*_reference`: fresh matmul
+    per backtracking trial, matmul b-solve and pre-activation),
+  * after  — the fused family (entry residual chained through incremental
+    backtracking, matmul-free b/z pre-activation, kernel-dispatched ops).
+
+The before/after row and ratio land in BENCH_speedup.json (repo root and
+artifacts/bench/), the perf trajectory tracked PR over PR. `--smoke` runs
+tiny tile-aligned shapes (CI pairs it with REPRO_KERNELS=interpret so the
+Pallas kernels actually execute on the CPU runner).
+
+Timing discipline: donated jit buffers, one compile + one steady-state
+warmup call, timed loop feeds outputs back as inputs (a real data
+dependency — nothing can be hoisted), block_until_ready before every clock
+read, median over repeats.
 """
 from __future__ import annotations
 
-import functools
+import argparse
+import json
+import statistics
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import print_rows, timed, write_csv
-from repro.core import pdadmm, subproblems as sp
+from benchmarks.common import ART, print_rows, write_csv
+from repro.core import subproblems as sp
 from repro.core.pdadmm import ADMMConfig
-from repro.graph.datasets import synthetic
 
 BW = 50e9          # bytes/s per link (ICI)
 ALPHA = 5e-6       # per-message latency, seconds
+ROOT = Path(__file__).resolve().parents[1]
 
 
-def _measure_layer_time(V: int, n: int, cfg: ADMMConfig) -> float:
-    """Wall time of one layer's (p, W, b, z, q, u) update at [V, n]."""
-    key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 6)
-    p = jax.random.normal(ks[0], (V, n))
-    W = jax.random.normal(ks[1], (n, n)) / jnp.sqrt(n)
-    b = jnp.zeros((n,))
-    z = jax.random.normal(ks[2], (V, n))
-    q = jax.random.normal(ks[3], (V, n))
-    u = jax.random.normal(ks[4], (V, n)) * 0.01
+def _layer_inputs(V: int, n: int):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    return (jax.random.normal(ks[0], (V, n)),
+            jax.random.normal(ks[1], (n, n)) / jnp.sqrt(n),
+            jnp.zeros((n,)),
+            jax.random.normal(ks[2], (V, n)),
+            jax.random.normal(ks[3], (V, n)),
+            jax.random.normal(ks[4], (V, n)) * 0.01)
 
-    @jax.jit
-    def one_layer(p, W, b, z, q, u):
-        pn, _ = sp.update_p(p, W, b, z, q, u, cfg.nu, cfg.rho, 1.0)
-        Wn, _ = sp.update_W(pn, W, b, z, q, u, cfg.nu, cfg.rho, 1.0,
-                            first=False)
+
+def _one_layer_before(cfg: ADMMConfig):
+    """The pre-fast-path (p, W, b, z, q, u) update family."""
+    def f(p, W, b, z, q, u):
+        pn, _ = sp.update_p_reference(p, W, b, z, q, u, cfg.nu, cfg.rho, 1.0)
+        Wn, _ = sp.update_W_reference(pn, W, b, z, q, u, cfg.nu, cfg.rho,
+                                      1.0, first=False)
         bn = sp.update_b(pn, Wn, z)
         a = sp.linear(pn, Wn, bn)
         zn = sp.update_z_hidden(a, q, z, cfg.nu)
         qn = sp.update_q(pn, u, jnp.maximum(zn, 0), cfg.nu, cfg.rho)
         un, _ = sp.update_u(u, pn, qn, cfg.rho)
         return pn, Wn, bn, zn, qn, un
-
-    t, _ = timed(one_layer, p, W, b, z, q, u, repeats=3, warmup=1)
-    return t
+    return f
 
 
-def run_layers(neurons: int = 512, V: int = 2485):
+def _one_layer_after(cfg: ADMMConfig, use_kernels: bool = True):
+    """The fused family: one entry residual chained end to end."""
+    def f(p, W, b, z, q, u):
+        r = sp._residual(p, W, b, z, use_kernels)
+        pn, _, r = sp.update_p(p, W, b, z, q, u, cfg.nu, cfg.rho, 1.0,
+                               r0=r, use_kernels=use_kernels)
+        Wn, _, r = sp.update_W(pn, W, b, z, q, u, cfg.nu, cfg.rho, 1.0,
+                               first=False, r0=r, use_kernels=use_kernels)
+        db = jnp.mean(r, axis=0)
+        bn, r = b + db, r - db
+        zn = sp._zupdate(z - r, q, z, cfg.nu, use_kernels)
+        qn = sp.update_q(pn, u, jnp.maximum(zn, 0), cfg.nu, cfg.rho)
+        un, _ = sp.update_u(u, pn, qn, cfg.rho)
+        return pn, Wn, bn, zn, qn, un
+    return f
+
+
+def _measure_layer_time(V: int, n: int, cfg: ADMMConfig, *,
+                        impl: str = "after", repeats: int = 5,
+                        inner: int = 3) -> float:
+    """Median wall time of one layer's (p, W, b, z, q, u) update at [V, n].
+
+    Donated buffers + output-feeds-input loop + block_until_ready around
+    every clock read, so timings exclude compile, allocator churn and
+    host-sync noise.
+    """
+    fn = (_one_layer_before if impl == "before" else _one_layer_after)(cfg)
+    step = jax.jit(fn, donate_argnums=tuple(range(6)))
+    out = step(*_layer_inputs(V, n))     # compile
+    out = step(*out)                     # donation steady state
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = step(*out)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / inner)
+    return statistics.median(times)
+
+
+def bench_layer_update(V: int = 2485, neurons: int = 512, *,
+                       repeats: int = 5, inner: int = 3,
+                       smoke: bool = False) -> dict:
+    """The before/after row: measured pre-PR vs fused layer-update time."""
+    import os
+    cfg = ADMMConfig(nu=1e-3, rho=1e-3)
+    t_before = _measure_layer_time(V, neurons, cfg, impl="before",
+                                   repeats=repeats, inner=inner)
+    t_after = _measure_layer_time(V, neurons, cfg, impl="after",
+                                  repeats=repeats, inner=inner)
+    payload = {
+        "benchmark": "layer_update_family",
+        "V": V,
+        "neurons": neurons,
+        "config": {"nu": cfg.nu, "rho": cfg.rho},
+        "mode": "smoke" if smoke else "full",
+        "kernel_policy": os.environ.get("REPRO_KERNELS", "auto"),
+        "backend": jax.default_backend(),
+        "t_layer_before_s": t_before,
+        "t_layer_after_s": t_after,
+        "speedup": t_before / t_after,
+    }
+    for path in (ROOT / "BENCH_speedup.json", ART / "BENCH_speedup.json"):
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+    rows = [[V, neurons, f"{t_before*1e3:.2f}", f"{t_after*1e3:.2f}",
+             f"{t_before/t_after:.2f}"]]
+    print_rows("bench_speedup: layer update before/after",
+               ["V", "neurons", "t_before_ms", "t_after_ms", "speedup"], rows)
+    return payload
+
+
+def run_layers(neurons: int = 512, V: int = 2485,
+               t_layer: float | None = None):
     """Fig 3: speedup vs #layers at fixed #workers = L (paper: 1 layer/GPU)."""
     cfg = ADMMConfig(nu=1e-3, rho=1e-3)
-    t_layer = _measure_layer_time(V, neurons, cfg)
+    if t_layer is None:
+        t_layer = _measure_layer_time(V, neurons, cfg)
     boundary_bytes = 3 * V * neurons * 4      # q, u fwd + p bwd, fp32
     t_comm = boundary_bytes / BW + ALPHA
     rows = []
@@ -117,5 +206,15 @@ def run_devices(neurons: int = 512, L: int = 16,
 
 
 if __name__ == "__main__":
-    run_layers()
-    run_devices()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tile-aligned shapes, minimal repeats (CI "
+                         "pairs this with REPRO_KERNELS=interpret to run "
+                         "the Pallas kernels on the CPU runner)")
+    args = ap.parse_args()
+    if args.smoke:
+        bench_layer_update(V=256, neurons=128, repeats=2, inner=1, smoke=True)
+    else:
+        payload = bench_layer_update()
+        run_layers(t_layer=payload["t_layer_after_s"])
+        run_devices()

@@ -30,8 +30,17 @@ def main():
                              epochs=40)
     print(f"objective {hist_q['objective'][0]:.2f} -> {hist_q['objective'][-1]:.2f}")
     print(f"test acc  {hist_q['test_acc'][-1]:.3f}")
-    base = pdadmm.comm_bytes_per_iteration(dims, X.shape[0], cfg)
-    qb = pdadmm.comm_bytes_per_iteration(dims, X.shape[0], cfg_q)
+    # wire bytes come from the CommLedger — the single source of truth
+    from repro.comm.codecs import codec_for_grid
+    from repro.comm.ledger import admm_bytes_per_iteration
+
+    def bytes_per_iter(c):
+        return admm_bytes_per_iteration(
+            dims, X.shape[0],
+            codec_for_grid(c.grid if c.quantize_p else None),
+            codec_for_grid(c.grid if c.quantize_q else None))
+
+    base, qb = bytes_per_iter(cfg), bytes_per_iter(cfg_q)
     print(f"comm bytes/iter: {base:.3e} -> {qb:.3e} "
           f"({100 * (1 - qb / base):.0f}% saved)")
 

@@ -204,7 +204,8 @@ def admm_edges(dims, V: int) -> List[int]:
 
 def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
                    controller: BitWidthController, ledger,
-                   grids_by_bits: Dict[int, "object"]):
+                   grids_by_bits: Dict[int, "object"],
+                   control_interval: int = 1):
     """pdADMM-G-Q training with the controller assigning each boundary's
     p/q — and, with `admm_edges`-shaped controllers, u — exchange a
     bit-width every iteration; every payload goes on the ledger. Returns
@@ -218,6 +219,16 @@ def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
 
     Compiled-step cache is keyed by the bit schedule: hysteresis bounds the
     number of distinct schedules, hence the number of recompiles.
+
+    The loop rides ``pdadmm.run_chunked`` (the scan driver): each control
+    step runs ``control_interval`` iterations as one ``lax.scan`` under the
+    frozen schedule, with ONE host transfer of the stacked residual history
+    per chunk. The controller is then replayed over the chunk's interior
+    iterations, so its dwell/peak/budget state evolves exactly as if it had
+    been consulted every iteration — with ``control_interval=1`` (default)
+    the semantics are bit-for-bit the legacy per-iteration loop; larger
+    intervals trade up to ``control_interval - 1`` iterations of schedule
+    lag for proportionally fewer device→host syncs.
     """
     from repro.comm import ledger as ledger_mod
     from repro.comm.codecs import FP32, AffineCodec, GridCodec
@@ -256,31 +267,44 @@ def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
             q_grids = tuple(grids_by_bits[b] for b in pq)
             u_codecs = (tuple(AffineCodec(b) for b in uu)
                         if uu is not None else None)
-            step_cache[schedule] = jax.jit(functools.partial(
+            step_cache[schedule] = functools.partial(
                 pdadmm.iterate, config=config, p_grids=p_grids,
-                q_grids=q_grids, u_codecs=u_codecs))
+                q_grids=q_grids, u_codecs=u_codecs)
         return step_cache[schedule]
 
     hist = {"objective": [], "residual": [], "val_acc": [], "test_acc": [],
             "schedules": []}
     bound_res = [0.0] * n_bound
-    for e in range(epochs):
+    interval = max(1, int(control_interval))
+    e = 0
+    while e < epochs:
         residuals = bound_res + bound_res if manage_u else bound_res
         sched = controller.assign(residuals, e)
-        hist["schedules"].append(sched)
-        state, m = step_for(sched)(state, X, labels, masks["train"])
+        c = min(interval, epochs - e)
+        state, ms = pdadmm.run_chunked(
+            step_for(sched), state, (X, labels, masks["train"]), c, chunk=c)
         # primal + dual residual per boundary: the primal part collapses to 0
         # once p and q share a grid, the dual part keeps decaying with actual
         # convergence progress — their sum drives the bit-width everywhere.
-        bound_res = [float(r) + float(s) for r, s in
-                     zip(m["layer_residuals"], m["layer_dual_residuals"])]
+        chunk_res = [[float(r) + float(s) for r, s in zip(lr, ldr)]
+                     for lr, ldr in zip(ms["layer_residuals"],
+                                        ms["layer_dual_residuals"])]
         pq, uu = split(sched)
         codecs = [GridCodec(grids_by_bits[b]) for b in pq]
         u_codecs = ([AffineCodec(b) for b in uu] if uu is not None else FP32)
-        ledger_mod.record_admm_iteration(ledger, e, dims, V, codecs, codecs,
-                                         u_codecs)
-        hist["objective"].append(float(m["objective"]))
-        hist["residual"].append(float(m["residual"]))
+        for i in range(c):
+            hist["schedules"].append(sched)
+            ledger_mod.record_admm_iteration(ledger, e + i, dims, V, codecs,
+                                             codecs, u_codecs)
+            hist["objective"].append(float(ms["objective"][i]))
+            hist["residual"].append(float(ms["residual"][i]))
+        # replay the controller over the chunk's interior iterations so its
+        # dwell/peak/budget state matches a per-iteration consultation
+        for i in range(1, c):
+            br = chunk_res[i - 1]
+            controller.assign(br + br if manage_u else br, e + i)
+        bound_res = chunk_res[-1]
+        e += c
     hist["val_acc"].append(float(pdadmm.forward_accuracy(
         state, X, labels, masks["val"])))
     hist["test_acc"].append(float(pdadmm.forward_accuracy(

@@ -126,3 +126,14 @@ def record_admm_iteration(ledger: CommLedger, iteration: int, dims, V: int,
                               per(u_codec, l), shape)
         ledger.record_payload(iteration, f"p_bwd/l{l}", "ppermute",
                               per(p_codecs, l), shape)
+
+
+def admm_bytes_per_iteration(dims, V: int, p_codecs, q_codecs,
+                             u_codec=None) -> int:
+    """Exact wire bytes of ONE pdADMM-G iteration under the Fig-5 model —
+    `record_admm_iteration` on a scratch ledger, so every caller that needs
+    a projection (budgets, examples, the deprecated pdadmm shim) shares the
+    one accounting implementation."""
+    led = CommLedger()
+    record_admm_iteration(led, 0, dims, V, p_codecs, q_codecs, u_codec)
+    return led.total_bytes()

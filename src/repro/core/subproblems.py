@@ -51,6 +51,24 @@ def grad_W(p, W, b, z, nu):
 
 # ---------------------------------------------------------------------------
 # Backtracking quadratic-approximation steps (p- and W-updates)
+#
+# The accept test at trial τ is  φ(x⁺) <= U(x⁺;τ) = φ0 + gᵀd + (τ/2)||d||²
+# (d = x⁺ - x0, with the same 1e-6 relative slack everywhere). Two engines:
+#
+#   * `_backtrack` — the naive engine: re-evaluates φ on the full tensors
+#     every trial (a fresh [V,n]x[n,m] matmul per doubling). Kept as the
+#     ground-truth oracle for the `update_*_reference` pre-optimization
+#     solvers and the property tests.
+#   * `_backtrack_scalar` — the incremental engine for the unprojected step
+#     x⁺ = x0 - g/τ: φ is exactly quadratic along -g, so every trial reduces
+#     to three cached scalars (φ0, ||g||², the curvature gᵀHg) and the whole
+#     search runs matmul-free. Accepts batched (per-layer vector) inputs:
+#     each component doubles independently until its own test passes.
+#
+# The projected (quantized) step is NOT linear in 1/τ, so `update_p` with a
+# grid evaluates the exact delta-residual form φ(x⁺) = (ν/2)||r0 - dW||² + …
+# per trial through `ops.backtrack_resnorm` — one fused kernel per trial
+# instead of recomputing z - x⁺W - b from scratch.
 # ---------------------------------------------------------------------------
 
 def _backtrack(x0, g, phi_at, phi0, t0, *, grid: Optional[QuantGrid],
@@ -83,17 +101,187 @@ def _backtrack(x0, g, phi_at, phi0, t0, *, grid: Optional[QuantGrid],
     return step(t_final), t_final
 
 
+def _backtrack_scalar(phi0, g_sq, curv, t0, *, max_doublings: int = 12):
+    """Matmul-free backtracking on the exact quadratic restriction of φ along
+    -g:  φ(x0 - g/τ) = φ0 - ||g||²/τ + gᵀHg/(2τ²),  U(τ) = φ0 - ||g||²/(2τ).
+
+    Same accept test and doubling schedule as `_backtrack`, evaluated on
+    three scalars. All inputs may be same-shaped vectors (one entry per
+    stacked layer); each entry doubles until its own accept test passes.
+    """
+    t0 = jnp.asarray(t0, jnp.float32)
+
+    def needs_doubling(t):
+        s = 1.0 / t
+        phi_x = phi0 - s * g_sq + 0.5 * s * s * curv
+        u_val = phi0 - 0.5 * s * g_sq
+        return phi_x > u_val + 1e-6 * jnp.abs(u_val)
+
+    def cond(state):
+        t, j = state
+        return jnp.logical_and(jnp.any(needs_doubling(t)), j < max_doublings)
+
+    def body(state):
+        t, j = state
+        return jnp.where(needs_doubling(t), t * 2.0, t), j + 1
+
+    t_final, _ = jax.lax.while_loop(cond, body,
+                                    (t0, jnp.asarray(0, jnp.int32)))
+    return t_final
+
+
+def _dot(a, b):
+    """Scalar <a, b> as an elementwise multiply-reduce. Unlike jnp.vdot
+    this never lowers to dot_general, keeping the fast solvers' jaxprs at
+    exactly the two genuine matmuls (asserted by the trace-level test)."""
+    return jnp.sum(a * b)
+
+
+# -- kernel-dispatch helpers (jnp fallback when use_kernels=False) -----------
+
+def _residual(p, W, b, z, use_kernels: bool):
+    """r = z - (pW + b), the quantity every solver in the family re-reads."""
+    if use_kernels:
+        from repro.kernels import ops
+        return ops.fused_linear(p, W, b, z, mode="residual")
+    return z - linear(p, W, b)
+
+
+def _pgrad(r0, W, u_prev, p, q_prev, nu, rho, use_kernels: bool):
+    if use_kernels:
+        from repro.kernels import ops
+        return ops.admm_pgrad(r0, W, u_prev, p, q_prev,
+                              nu=float(nu), rho=float(rho))
+    return -nu * (r0 @ W.T) + u_prev + rho * (p - q_prev)
+
+
+def _matmul(a, bmat, use_kernels: bool):
+    if use_kernels:
+        from repro.kernels import ops
+        return ops.fused_linear(a, bmat, jnp.zeros((bmat.shape[1],), a.dtype),
+                                mode="linear")
+    return a @ bmat
+
+
+def _resnorm_sq(r0, d, W, use_kernels: bool):
+    if use_kernels:
+        from repro.kernels import ops
+        return ops.backtrack_resnorm(r0, d, W)
+    r = r0 - d @ W
+    return jnp.vdot(r, r)
+
+
+def _zupdate(a, q, z_old, nu, use_kernels: bool):
+    """Eq.-6 ReLU z-update dispatch (the minimizer is ν-independent, so the
+    kernel takes no ν). Shared by the single-host loop, the stage-parallel
+    runtime and the benchmark — one dispatch decision for all three."""
+    if use_kernels:
+        from repro.kernels import ops
+        return ops.relu_zupdate(a, q, z_old)
+    return update_z_hidden(a, q, z_old, nu)
+
+
 def update_p(p, W, b, z, q_prev, u_prev, nu, rho, tau0,
-             grid: Optional[QuantGrid] = None):
-    """p-subproblem (Eq. 3 / Eq. 10). Returns (p_new, tau_used)."""
+             grid: Optional[QuantGrid] = None, r0=None,
+             use_kernels: bool = False, max_doublings: int = 12):
+    """p-subproblem (Eq. 3 / Eq. 10), matmul-minimal.
+
+    Returns ``(p_new, tau_used, r_new)`` with ``r_new = z - p_new W - b`` so
+    the caller can chain the residual into the W-/b-/z-updates without ever
+    recomputing a [V,n]x[n,m] product. Pass ``r0 = z - pW - b`` (e.g. from
+    ``ops.fused_linear(mode="residual")``) to skip the entry matmul: the
+    unprojected path then costs exactly 2 matmuls (r0 Wᵀ for the gradient,
+    gW for the curvature/residual axpy) regardless of trial count.
+    """
+    if r0 is None:
+        r0 = _residual(p, W, b, z, use_kernels)
+    g = _pgrad(r0, W, u_prev, p, q_prev, nu, rho, use_kernels)
+    d0 = p - q_prev
+    phi0 = (0.5 * nu * _dot(r0, r0) + _dot(u_prev, d0)
+            + 0.5 * rho * _dot(d0, d0))
+
+    if grid is None:
+        # x⁺(τ) = p - g/τ is linear in 1/τ: the residual moves along the
+        # cached direction gW and every trial is scalar arithmetic.
+        gW = _matmul(g, W, use_kernels)
+        g_sq = _dot(g, g)
+        curv = nu * _dot(gW, gW) + rho * g_sq          # gᵀ(ν WWᵀ + ρI)g
+        tau = _backtrack_scalar(phi0, g_sq, curv, tau0,
+                                max_doublings=max_doublings)
+        return p - g / tau, tau, r0 + gW / tau
+
+    # Projected path: x⁺ = proj(p - g/τ) is only piecewise linear in 1/τ,
+    # so each trial evaluates the exact delta-residual φ — one fused
+    # ||r0 - dW||² contraction per trial instead of a fresh z - x⁺W - b.
+    def trial_d(t):
+        return grid.project(p - g / t) - p
+
+    def cond(state):
+        t, j = state
+        d = trial_d(t)
+        dq = d + d0
+        phi_x = (0.5 * nu * _resnorm_sq(r0, d, W, use_kernels)
+                 + jnp.vdot(u_prev, dq) + 0.5 * rho * jnp.vdot(dq, dq))
+        u_val = phi0 + jnp.vdot(g, d) + 0.5 * t * jnp.vdot(d, d)
+        return jnp.logical_and(phi_x > u_val + 1e-6 * jnp.abs(u_val),
+                               j < max_doublings)
+
+    def body(state):
+        t, j = state
+        return t * 2.0, j + 1
+
+    tau, _ = jax.lax.while_loop(cond, body, (jnp.asarray(tau0, jnp.float32),
+                                             jnp.asarray(0, jnp.int32)))
+    d = trial_d(tau)
+    if use_kernels:
+        from repro.kernels import ops
+        r_new = ops.fused_linear(d, W, jnp.zeros((W.shape[1],), d.dtype),
+                                 r0, mode="residual")
+    else:
+        r_new = r0 - d @ W
+    return p + d, tau, r_new
+
+
+def update_W(p, W, b, z, q_prev, u_prev, nu, rho, theta0, *, first: bool,
+             r0=None, use_kernels: bool = False, max_doublings: int = 12):
+    """W-subproblem (Eq. 4), matmul-minimal.
+
+    Returns ``(W_new, theta_used, r_new)`` with ``r_new = z - p W_new - b``.
+    With ``r0`` supplied the solve is exactly 2 matmuls (pᵀr0 for the
+    gradient, pg for the curvature/residual axpy) regardless of trial count.
+    The dual terms of φ are constants w.r.t. W; they enter only φ0 (they
+    scale the relative accept slack, matching the naive engine exactly).
+    """
+    if r0 is None:
+        r0 = _residual(p, W, b, z, use_kernels)
+    g = -nu * (p.T @ r0)
+    pg = _matmul(p, g, use_kernels)
+    phi0 = 0.5 * nu * _dot(r0, r0)
+    if not first:
+        d0 = p - q_prev
+        phi0 = phi0 + _dot(u_prev, d0) + 0.5 * rho * _dot(d0, d0)
+    g_sq = _dot(g, g)
+    curv = nu * _dot(pg, pg)                           # gᵀ(ν pᵀp ⊗ I)g
+    theta = _backtrack_scalar(phi0, g_sq, curv, theta0,
+                              max_doublings=max_doublings)
+    return W - g / theta, theta, r0 + pg / theta
+
+
+# -- pre-optimization reference solvers (naive full-tensor backtracking) -----
+
+def update_p_reference(p, W, b, z, q_prev, u_prev, nu, rho, tau0,
+                       grid: Optional[QuantGrid] = None):
+    """The pre-fast-path p-subproblem: fresh matmul per backtracking trial.
+    Ground truth for the incremental engine; returns (p_new, tau_used)."""
     g = grad_p(p, W, b, z, q_prev, u_prev, nu, rho)
     phi0 = phi(p, W, b, z, q_prev, u_prev, nu, rho)
     phi_at = lambda x: phi(x, W, b, z, q_prev, u_prev, nu, rho)
     return _backtrack(p, g, phi_at, phi0, tau0, grid=grid)
 
 
-def update_W(p, W, b, z, q_prev, u_prev, nu, rho, theta0, *, first: bool):
-    """W-subproblem (Eq. 4). Returns (W_new, theta_used)."""
+def update_W_reference(p, W, b, z, q_prev, u_prev, nu, rho, theta0, *,
+                       first: bool):
+    """The pre-fast-path W-subproblem. Returns (W_new, theta_used)."""
     g = grad_W(p, W, b, z, nu)
     if first:
         phi0 = phi_first(p, W, b, z, nu)

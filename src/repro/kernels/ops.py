@@ -1,78 +1,184 @@
-"""Jit'd dispatch layer for the Pallas kernels.
+"""Dispatch layer for the Pallas kernels — the ONE place that decides how a
+hot op executes.
 
-``use_pallas`` selects the kernel path; on a CPU host the kernels run in
-interpret mode (the dry-run and the distributed step always lower the jnp
-path — a CPU can't lower TPU Pallas). On a real TPU runtime set
-``interpret=False`` (default when a TPU backend is detected).
+Dispatch policy (resolved per call, outside the jit boundary):
+
+  1. ``use_pallas=None`` (the default every hot-loop caller should use)
+     follows the ``REPRO_KERNELS`` environment variable:
+
+       * ``auto`` (default) — compiled Pallas on a TPU backend; the pure-jnp
+         ``ref`` oracles everywhere else. CPU interpret mode is NEVER
+         auto-selected: it exists for kernel correctness, and is orders of
+         magnitude slower than letting XLA fuse the jnp expression.
+       * ``ref`` — force the jnp oracles (useful for A/B numerics).
+       * ``pallas`` — force compiled Pallas (TPU runtimes).
+       * ``interpret`` — force Pallas in interpret mode (CI's bench-smoke
+         job runs the whole fast path this way so the kernel wiring is
+         exercised on every PR without TPU hardware).
+
+  2. Explicit ``use_pallas=True/False`` overrides the policy; with
+     ``use_pallas=True``, ``interpret=None`` resolves to interpret mode on
+     any non-TPU backend. An explicit ``interpret=`` with ``use_pallas``
+     left as None implies the Pallas path (``interpret=False`` = compiled) —
+     asking for an interpretation mode IS asking for the kernel.
+
+  3. Shape guard: the matmul kernels require 128-ish tile divisibility
+     (``M % min(bm, M) == 0`` etc.). When a Pallas path is selected but the
+     operand shapes cannot tile, dispatch silently falls back to ``ref``
+     rather than fail — ragged real-world sizes (e.g. V=2485 nodes) stay on
+     the XLA path, TPU-shaped workloads get the fused kernel.
+
+The policy is re-read on every call (cheap), but note each resolved variant
+is a separate jit specialization; flipping ``REPRO_KERNELS`` mid-process
+never reuses a stale compilation.
+
+Known kernel gaps (see ROADMAP "Open items"): the FISTA z_last solve and the
+packed-int4 psum have no Pallas implementation yet — they always take the
+jnp path.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (admm_pgrad as _pg, flash_attention as _fa,
-                           fused_linear as _fl, quantize_kernel as _qk,
-                           ref, relu_zupdate as _zu)
+from repro.kernels import (admm_pgrad as _pg, backtrack_phi as _bt,
+                           flash_attention as _fa, fused_linear as _fl,
+                           quantize_kernel as _qk, ref, relu_zupdate as _zu)
+
+POLICY_ENV = "REPRO_KERNELS"
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _resolve(use_pallas, interpret):
+    """-> (use_pallas: bool, interpret: bool), per the module policy."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        if interpret is not None:
+            # an explicit interpret request implies the Pallas path
+            # (interpret=False means compiled Pallas)
+            return True, interpret
+        policy = os.environ.get(POLICY_ENV, "auto")
+        if policy == "ref":
+            return False, False
+        if policy == "pallas":
+            return True, False
+        if policy == "interpret":
+            return True, True
+        return (True, False) if on_tpu else (False, False)
+    if not use_pallas:
+        return False, False
+    return True, (not on_tpu) if interpret is None else interpret
 
+
+def _tiles(n: int, block: int) -> bool:
+    return n % min(block, n) == 0
+
+
+# ---------------------------------------------------------------------------
+# jit'd implementations (static dispatch flags resolved by the wrappers)
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("mode", "use_pallas", "interpret"))
-def fused_linear(p, W, b, z=None, *, mode="linear", use_pallas=True,
-                 interpret=None):
+def _fused_linear(p, W, b, z, *, mode, use_pallas, interpret):
     if not use_pallas:
         return ref.fused_linear_ref(p, W, b, z, mode=mode)
-    it = _default_interpret() if interpret is None else interpret
-    return _fl.fused_linear(p, W, b, z, mode=mode, interpret=it)
+    return _fl.fused_linear(p, W, b, z, mode=mode, interpret=interpret)
+
+
+def fused_linear(p, W, b, z=None, *, mode="linear", use_pallas=None,
+                 interpret=None):
+    up, it = _resolve(use_pallas, interpret)
+    if up and not (_tiles(p.shape[0], 256) and _tiles(p.shape[1], 512)
+                   and _tiles(W.shape[1], 256)):
+        up = False
+    return _fused_linear(p, W, b, z, mode=mode, use_pallas=up, interpret=it)
 
 
 @functools.partial(jax.jit, static_argnames=("nu", "rho", "use_pallas",
                                              "interpret"))
-def admm_pgrad(r, W, u, p, q, *, nu, rho, use_pallas=True, interpret=None):
+def _admm_pgrad(r, W, u, p, q, *, nu, rho, use_pallas, interpret):
     if not use_pallas:
         return ref.admm_pgrad_ref(r, W, u, p, q, nu=nu, rho=rho)
-    it = _default_interpret() if interpret is None else interpret
-    return _pg.admm_pgrad(r, W, u, p, q, nu=nu, rho=rho, interpret=it)
+    return _pg.admm_pgrad(r, W, u, p, q, nu=nu, rho=rho, interpret=interpret)
 
 
-def grid_project(x, grid, *, use_pallas=True, interpret=None):
+def admm_pgrad(r, W, u, p, q, *, nu, rho, use_pallas=None, interpret=None):
+    up, it = _resolve(use_pallas, interpret)
+    if up and not (_tiles(r.shape[0], 256) and _tiles(r.shape[1], 256)
+                   and _tiles(W.shape[0], 256)):
+        up = False
+    return _admm_pgrad(r, W, u, p, q, nu=nu, rho=rho, use_pallas=up,
+                       interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _backtrack_resnorm(r0, d, W, *, use_pallas, interpret):
     if not use_pallas:
+        return ref.backtrack_resnorm_ref(r0, d, W)
+    return _bt.backtrack_resnorm(r0, d, W, interpret=interpret)
+
+
+def backtrack_resnorm(r0, d, W, *, use_pallas=None, interpret=None):
+    """||r0 - d @ W||² (the projected backtracking trial's data-fit term)."""
+    up, it = _resolve(use_pallas, interpret)
+    if up and not (_tiles(d.shape[0], 256) and _tiles(d.shape[1], 512)
+                   and _tiles(W.shape[1], 256)):
+        up = False
+    return _backtrack_resnorm(r0, d, W, use_pallas=up, interpret=it)
+
+
+def grid_project(x, grid, *, use_pallas=None, interpret=None):
+    up, it = _resolve(use_pallas, interpret)
+    if not up:
         return ref.grid_project_ref(x, grid)
-    it = _default_interpret() if interpret is None else interpret
     return _qk.grid_project(x, grid, interpret=it)
 
 
-def grid_encode(x, grid, *, use_pallas=True, interpret=None):
-    if not use_pallas:
+def grid_encode(x, grid, *, use_pallas=None, interpret=None):
+    up, it = _resolve(use_pallas, interpret)
+    if not up:
         return ref.grid_encode_ref(x, grid)
-    it = _default_interpret() if interpret is None else interpret
     return _qk.grid_encode(x, grid, interpret=it)
 
 
-def grid_decode(codes, grid, out_dtype=jnp.float32, *, use_pallas=True,
+def grid_decode(codes, grid, out_dtype=jnp.float32, *, use_pallas=None,
                 interpret=None):
-    if not use_pallas:
+    up, it = _resolve(use_pallas, interpret)
+    if not up:
         return ref.grid_decode_ref(codes, grid, out_dtype)
-    it = _default_interpret() if interpret is None else interpret
     return _qk.grid_decode(codes, grid, out_dtype, interpret=it)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def relu_zupdate(a, q, z_old, *, use_pallas=True, interpret=None):
+def _relu_zupdate(a, q, z_old, *, use_pallas, interpret):
     if not use_pallas:
         return ref.relu_zupdate_ref(a, q, z_old)
-    it = _default_interpret() if interpret is None else interpret
-    return _zu.relu_zupdate(a, q, z_old, interpret=it)
+    return _zu.relu_zupdate(a, q, z_old, interpret=interpret)
+
+
+def relu_zupdate(a, q, z_old, *, use_pallas=None, interpret=None):
+    """Fused Eq.-6 ReLU z-update. Accepts [..., V, n]: leading axes (the
+    layer-stacked fast path) are flattened into the row dimension — the op
+    is elementwise, so the tiling is shape-free."""
+    up, it = _resolve(use_pallas, interpret)
+    shape = a.shape
+    if a.ndim > 2:
+        a, q, z_old = (t.reshape(-1, shape[-1]) for t in (a, q, z_old))
+    out = _relu_zupdate(a, q, z_old, use_pallas=up, interpret=it)
+    return out.reshape(shape)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "use_pallas",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal=True, use_pallas=True, interpret=None):
+def _flash_attention(q, k, v, *, causal, use_pallas, interpret):
     if not use_pallas:
         return ref.flash_attention_ref(q, k, v, causal=causal)
-    it = _default_interpret() if interpret is None else interpret
-    return _fa.flash_attention(q, k, v, causal=causal, interpret=it)
+    return _fa.flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, use_pallas=None, interpret=None):
+    up, it = _resolve(use_pallas, interpret)
+    return _flash_attention(q, k, v, causal=causal, use_pallas=up,
+                            interpret=it)

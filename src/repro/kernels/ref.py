@@ -21,6 +21,11 @@ def admm_pgrad_ref(r, W, u, p, q, *, nu: float, rho: float):
     return g.astype(p.dtype)
 
 
+def backtrack_resnorm_ref(r0, d, W):
+    r = r0.astype(jnp.float32) - d.astype(jnp.float32) @ W.astype(jnp.float32)
+    return jnp.sum(r * r)
+
+
 def grid_project_ref(x, grid):
     return grid.project(x)
 

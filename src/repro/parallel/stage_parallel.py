@@ -159,6 +159,8 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         z=P("model", dp), q=P("model", dp), u=P("model", dp))
     lab_spec = P(dp)
 
+    uk = config.use_kernels
+
     def stage_body(st: StackState, Xp, labels, label_mask):
         sidx = jax.lax.axis_index("model")
         gidx = sidx * m_loc + jnp.arange(m_loc)          # global layer ids
@@ -171,33 +173,41 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         q_prev = jnp.where(is_first, 0.0, q_prev)        # layer 0 has no prev
         u_prev = jnp.where(is_first, 0.0, u_prev)
 
+        # ---- entry residuals r = z - pW - b (ONE fused op per layer);
+        # chained through the whole update family below, so no solver ever
+        # recomputes the linear map and backtracking trials are matmul-free.
+        r = jax.vmap(lambda p_, W_, b_, z_: sp._residual(p_, W_, b_, z_, uk))(
+            st.p, st.W, st.b, st.z)
+
         # ---- p-update (masked for layer 0: p0 = Xp fixed) -----------------
-        def p_upd(p, W, b, z, qp, up):
-            pn, _ = sp.update_p(p, W, b, z, qp, up, nu, rho, config.tau0,
-                                grid=p_grid)
-            return pn
-        p_new = jax.vmap(p_upd)(st.p, st.W, st.b, st.z, q_prev, u_prev)
+        def p_upd(p_, W_, b_, z_, qp, up, r_):
+            pn, _, rn = sp.update_p(p_, W_, b_, z_, qp, up, nu, rho,
+                                    config.tau0, grid=p_grid, r0=r_,
+                                    use_kernels=uk)
+            return pn, rn
+        p_new, r_new = jax.vmap(p_upd)(st.p, st.W, st.b, st.z, q_prev,
+                                       u_prev, r)
         p = jnp.where(is_first, Xp[None], p_new)
+        r = jnp.where(is_first, r, r_new)    # layer 0 keeps the Xp residual
 
         # ---- W-update ------------------------------------------------------
-        def W_upd(p_, W_, b_, z_, qp, up, first):
-            # first-layer φ has no dual terms: emulate via zeroed (qp,up) and
-            # rho=0 contribution — masked outside through qp=up=0 & d=p-0?
-            Wn, _ = sp.update_W(p_, W_, b_, z_, qp, up, nu, rho,
-                                config.tau0, first=False)
-            return Wn
-        # For layer 0 the dual/penalty terms are constants wrt W, so using the
-        # same formula with any (qp, up) is EXACT for the W gradient.
-        W = jax.vmap(W_upd, in_axes=(0, 0, 0, 0, 0, 0, None))(
-            p, st.W, st.b, st.z, q_prev, u_prev, False)
+        def W_upd(p_, W_, b_, z_, qp, up, r_):
+            # For layer 0 the dual/penalty terms are constants wrt W, so the
+            # same formula with zeroed (qp, up) is EXACT for the W gradient.
+            Wn, _, rn = sp.update_W(p_, W_, b_, z_, qp, up, nu, rho,
+                                    config.tau0, first=False, r0=r_,
+                                    use_kernels=uk)
+            return Wn, rn
+        W, r = jax.vmap(W_upd)(p, st.W, st.b, st.z, q_prev, u_prev, r)
 
-        # ---- b-update (exact, W-grad independent of dual terms) -----------
-        b = jax.vmap(sp.update_b)(p, W, st.z)
+        # ---- b-update (exact: b += mean r; matmul-free) -------------------
+        db = jnp.mean(r, axis=1)
+        b = st.b + db
+        r = r - db[:, None, :]
 
-        # ---- z-update -------------------------------------------------------
-        a = jax.vmap(sp.linear)(p, W, b)
-        z_hidden = jax.vmap(sp.update_z_hidden, in_axes=(0, 0, 0, None))(
-            a, st.q, st.z, nu)
+        # ---- z-update (a = pW + b = z - r; matmul-free) --------------------
+        a = st.z - r
+        z_hidden = sp._zupdate(a, st.q, st.z, nu, uk)
         z_last = jax.vmap(_fista_last,
                           in_axes=(0, 0, None, None, None, None, None))(
             a, st.z, labels, label_mask, nu, n_classes, config.fista_iters)
@@ -220,14 +230,16 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         risk_val = jnp.where(sidx == n_stages - 1, risk_val, 0.0)
         risk_val = jax.lax.psum(risk_val, "model")
         risk_val = jax.lax.psum(risk_val, dp) if dp else risk_val
-        lag = _local_lagrangian(StackState(p, W, b, z, q, u), Xp, q_prev,
-                                u_prev, is_first, is_last, nu, rho)
+        lag = _local_lagrangian(StackState(p, W, b, z, q, u),
+                                r + (z - st.z), q_prev, u_prev,
+                                is_first, is_last, nu, rho)
         lag = jax.lax.psum(lag, ("model",) + dp) + risk_val
         return StackState(p, W, b, z, q, u), {
             "residual": jnp.sqrt(res_sq), "objective": lag}
 
-    def _local_lagrangian(st, Xp, q_prev, u_prev, is_first, is_last, nu, rho):
-        rr = st.z - jax.vmap(sp.linear)(st.p, st.W, st.b)
+    def _local_lagrangian(st, rr, q_prev, u_prev, is_first, is_last, nu, rho):
+        # rr = z - pW - b at the NEW iterate, chained from the update family
+        # (zero extra matmuls vs re-deriving each layer's linear map).
         val = 0.5 * nu * jnp.sum(rr * rr)
         g = jnp.where(is_last, 0.0, st.q - relu(st.z))
         val += 0.5 * nu * jnp.sum(g * g)

@@ -142,10 +142,13 @@ def test_p_update_descent_condition():
     qp = jax.random.normal(ks[4], (V, ni))
     up = jax.random.normal(ks[5], (V, ni)) * 0.1
     phi0 = sp.phi(p, W, b, z, qp, up, 0.01, 1.0)
-    p_new, tau = sp.update_p(p, W, b, z, qp, up, 0.01, 1.0, 1e-3)
+    p_new, tau, r_new = sp.update_p(p, W, b, z, qp, up, 0.01, 1.0, 1e-3)
     phi1 = sp.phi(p_new, W, b, z, qp, up, 0.01, 1.0)
     # backtracking guarantees majorization => descent
     assert float(phi1) <= float(phi0) + 1e-5 * abs(float(phi0))
+    # the chained residual is exactly z - p_new W - b
+    np.testing.assert_allclose(np.asarray(r_new),
+                               np.asarray(z - p_new @ W - b), atol=1e-5)
 
 
 # --- quantized variant -----------------------------------------------------------

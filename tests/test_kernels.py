@@ -7,6 +7,7 @@ import pytest
 from repro.core.quantize import integer_grid, uniform_grid
 from repro.kernels import ref
 from repro.kernels.admm_pgrad import admm_pgrad
+from repro.kernels.backtrack_phi import backtrack_resnorm
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_linear import fused_linear
 from repro.kernels.quantize_kernel import grid_decode, grid_encode, grid_project
@@ -49,6 +50,20 @@ def test_admm_pgrad(V, ni, no, dtype):
     want = ref.admm_pgrad_ref(r, W, u, p, q, nu=0.01, rho=1.0)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 256),
+                                   (512, 384, 128), (64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_backtrack_resnorm(M, K, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    r0 = _rand(ks[0], (M, N), dtype)
+    d = _rand(ks[1], (M, K), dtype) * 0.1
+    W = _rand(ks[2], (K, N), dtype)
+    got = backtrack_resnorm(r0, d, W, bm=128, bk=128, bn=128, interpret=True)
+    want = ref.backtrack_resnorm_ref(r0, d, W)
+    np.testing.assert_allclose(float(got), float(want),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
 
 
 @pytest.mark.parametrize("shape", [(128, 256), (64, 100), (512, 1024), (7, 13)])
