@@ -18,9 +18,12 @@ the true tensor sizes. Two implementations are timed:
     backtracking, matmul-free b/z pre-activation, kernel-dispatched ops).
 
 The before/after row and ratio land in BENCH_speedup.json (repo root and
-artifacts/bench/), the perf trajectory tracked PR over PR. `--smoke` runs
-tiny tile-aligned shapes (CI pairs it with REPRO_KERNELS=interpret so the
-Pallas kernels actually execute on the CPU runner).
+artifacts/bench/), the perf trajectory tracked PR over PR, alongside the
+`z_last` row (`bench_zlast`): the pre-PR per-iteration FISTA dispatch loop
+vs the fused `ops.fista_zlast` solve at the Cora node count. `--smoke` runs
+tiny shapes (CI pairs it with REPRO_KERNELS=interpret so the Pallas kernels
+— now fed by pad-to-tile dispatch on any shape — actually execute on the
+CPU runner).
 
 Timing discipline: donated jit buffers, one compile + one steady-state
 warmup call, timed loop feeds outputs back as inputs (a real data
@@ -113,9 +116,68 @@ def _measure_layer_time(V: int, n: int, cfg: ADMMConfig, *,
     return statistics.median(times)
 
 
+def bench_zlast(V: int = 2485, C: int = 6, n_iters: int = 15, *,
+                nu: float = 1e-2, repeats: int = 9, inner: int = 20) -> dict:
+    """The z_last row: the pre-PR FISTA shape (one host dispatch per
+    iteration — the `fista_iters` separate softmax/CE-grad/momentum chains
+    the ROADMAP gap named) vs the fused `ops.fista_zlast` solve (one call;
+    per-iteration Pallas dispatches on the kernel path, a single fori_loop
+    on the jnp path)."""
+    from repro.kernels import ops
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    a = jax.random.normal(ks[0], (V, C))
+    z0 = jax.random.normal(ks[1], (V, C))
+    labels = jax.random.randint(ks[2], (V,), 0, C)
+    mask = jnp.ones((V,))
+    step = 1.0 / (1.0 + nu)
+
+    @jax.jit
+    def init_step(z):
+        g = sp.ce_grad_cols(z, labels, mask) + nu * (z - a)
+        return z, z - step * g, jnp.float32(1.0)
+
+    @jax.jit
+    def one_step(z_prev, z_cur, t):
+        t_new = (1.0 + jnp.sqrt(1.0 + 4.0 * t * t)) / 2.0
+        y = z_cur + ((t - 1.0) / t_new) * (z_cur - z_prev)
+        g = sp.ce_grad_cols(y, labels, mask) + nu * (y - a)
+        return z_cur, y - step * g, t_new
+
+    def loop_solve():
+        carry = init_step(z0)
+        for _ in range(n_iters):
+            carry = one_step(*carry)
+        return carry[1]
+
+    def fused_solve():
+        return ops.fista_zlast(a, z0, labels, mask, nu=nu, n_iters=n_iters)
+
+    def timed(f):
+        jax.block_until_ready(f())          # compile + warm
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                out = f()
+            jax.block_until_ready(out)
+            times.append((time.perf_counter() - t0) / inner)
+        return statistics.median(times)
+
+    t_loop, t_fused = timed(loop_solve), timed(fused_solve)
+    row = {"V": V, "C": C, "fista_iters": n_iters,
+           "t_loop_s": t_loop, "t_fused_s": t_fused,
+           "speedup": t_loop / t_fused}
+    print_rows("bench_speedup: z_last FISTA loop vs fused",
+               ["V", "C", "iters", "t_loop_ms", "t_fused_ms", "speedup"],
+               [[V, C, n_iters, f"{t_loop*1e3:.3f}", f"{t_fused*1e3:.3f}",
+                 f"{t_loop/t_fused:.2f}"]])
+    return row
+
+
 def bench_layer_update(V: int = 2485, neurons: int = 512, *,
                        repeats: int = 5, inner: int = 3,
-                       smoke: bool = False) -> dict:
+                       smoke: bool = False, zlast: dict | None = None) -> dict:
     """The before/after row: measured pre-PR vs fused layer-update time."""
     import os
     cfg = ADMMConfig(nu=1e-3, rho=1e-3)
@@ -135,6 +197,8 @@ def bench_layer_update(V: int = 2485, neurons: int = 512, *,
         "t_layer_after_s": t_after,
         "speedup": t_before / t_after,
     }
+    if zlast is not None:
+        payload["z_last"] = zlast
     for path in (ROOT / "BENCH_speedup.json", ART / "BENCH_speedup.json"):
         path.write_text(json.dumps(payload, indent=2) + "\n")
     rows = [[V, neurons, f"{t_before*1e3:.2f}", f"{t_after*1e3:.2f}",
@@ -213,8 +277,11 @@ if __name__ == "__main__":
                          "the Pallas kernels on the CPU runner)")
     args = ap.parse_args()
     if args.smoke:
-        bench_layer_update(V=256, neurons=128, repeats=2, inner=1, smoke=True)
+        zrow = bench_zlast(V=256, C=8, n_iters=5, repeats=2, inner=1)
+        bench_layer_update(V=256, neurons=128, repeats=2, inner=1, smoke=True,
+                           zlast=zrow)
     else:
-        payload = bench_layer_update()
+        zrow = bench_zlast()
+        payload = bench_layer_update(zlast=zrow)
         run_layers(t_layer=payload["t_layer_after_s"])
         run_devices()

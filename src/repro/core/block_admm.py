@@ -29,6 +29,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import subproblems as sp
 from repro.core.pdadmm import ADMMConfig
 
 
@@ -57,10 +58,19 @@ def init_block_state(block_fn, params_stacked, x0, L: int,
 
 def make_block_iterate(block_fn: Callable, risk_fn: Callable,
                        config: ADMMConfig, *, lr_w: float = 1e-3,
-                       fista_iters: int = 10):
+                       fista_iters: int = 10, labels=None, label_mask=None,
+                       n_classes: Optional[int] = None):
     """Build one block-pdADMM iteration (vmapped over stacked blocks).
 
     block_fn(params_l, p_l) -> z_l ; risk_fn(z_last) -> scalar.
+
+    When the risk is the standard masked softmax-CE, pass `labels` [B, S]
+    (+ optional `label_mask`, `n_classes`): the z-last solve then rides the
+    fused `ops.fista_zlast` kernel dispatch over the flattened token rows
+    (risk_fn must compute the same CE — it is still used for the objective
+    metric). With `labels=None` the solve runs the shared generic
+    `subproblems.fista_prox` loop on `jax.grad(risk_fn)` — either way the
+    FISTA iteration map lives in ONE place instead of a private copy here.
     """
     nu, rho = config.nu, config.rho
     p_grid = config.grid if config.quantize_p else None
@@ -110,20 +120,19 @@ def make_block_iterate(block_fn: Callable, risk_fn: Callable,
         z_hidden = (Bz + st.q + st.z) / 3.0
 
         def fista_last(a, z_old):
-            step = 1.0 / (1.0 + nu)
-
-            def g_grad(z):
-                return jax.grad(risk_fn)(z) + nu * (z - a)
-
-            def body(i, carry):
-                z_prev, z_cur, t = carry
-                t_new = (1.0 + jnp.sqrt(1.0 + 4.0 * t * t)) / 2.0
-                y = z_cur + ((t - 1.0) / t_new) * (z_cur - z_prev)
-                return z_cur, y - step * g_grad(y), t_new
-
-            _, z_fin, _ = jax.lax.fori_loop(
-                0, fista_iters, body, (z_old, z_old - step * g_grad(z_old), 1.0))
-            return z_fin
+            if labels is not None:
+                from repro.kernels import ops
+                d = a.shape[-1]
+                mask = (jnp.ones(labels.shape, a.dtype) if label_mask is None
+                        else label_mask)
+                z = ops.fista_zlast(
+                    a.reshape(-1, d), z_old.reshape(-1, d),
+                    labels.reshape(-1), mask.reshape(-1),
+                    nu=nu, n_iters=fista_iters, n_classes=n_classes)
+                return z.reshape(a.shape)
+            return sp.fista_prox(
+                lambda z: jax.grad(risk_fn)(z) + nu * (z - a),
+                z_old, 1.0 / (1.0 + nu), fista_iters)
 
         z_last = fista_last(Bz[-1], st.z[-1])
         z = jnp.where(is_last, z_last[None], z_hidden)

@@ -30,8 +30,10 @@ residual, r Wᵀ and gW in the p-update, pᵀr and pg in the W-update. When the
 hidden block is equal-width (the paper's large-scale setup), those five run
 layer-STACKED (``jax.vmap`` over an [L_h, ...] block, mirroring
 ``stage_parallel.StackState``), collapsing O(6L) kernel dispatches per
-iteration to O(1) per variable family. ``iterate_reference`` keeps the
-pre-optimization math as the ground-truth oracle.
+iteration to O(1) per variable family. The last-layer FISTA solve rides the
+fused ``ops.fista_zlast`` dispatch (one kernel per FISTA iteration).
+``iterate_reference`` keeps the pre-optimization math as the ground-truth
+oracle.
 """
 from __future__ import annotations
 
@@ -210,7 +212,8 @@ def _iterate_layers(state, X, labels, label_mask, config, p_grids, q_grids,
     for l in range(L - 1):
         z[l] = sp._zupdate(z[l] - r[l], q[l], z[l], nu, uk)
     z[L - 1] = sp.update_z_last(z[L - 1] - r[L - 1], z[L - 1], labels,
-                                label_mask, nu, config.fista_iters)
+                                label_mask, nu, config.fista_iters,
+                                use_kernels=uk)
 
     # ---- q-updates ----------------------------------------------------------
     dual_res = []
@@ -333,7 +336,8 @@ def _iterate_stacked(state, X, labels, label_mask, config, p_grids, q_grids,
     q_old = jnp.stack(state.q)                          # [L-1, V, h]
     z_hid = sp._zupdate(a_hid, q_old, z_old_hid, nu, uk)
     z_last = sp.update_z_last(state.z[last] - rl, state.z[last], labels,
-                              label_mask, nu, config.fista_iters)
+                              label_mask, nu, config.fista_iters,
+                              use_kernels=uk)
 
     # ---- q-updates (closed form; elementwise, so the [L-1,V,h] stack goes
     # straight through the per-layer solver) --------------------------------
@@ -414,8 +418,8 @@ def iterate_reference(state: ADMMState, X, labels, label_mask,
         a = sp.linear(p[l], W[l], b[l])
         z[l] = sp.update_z_hidden(a, q[l], z[l], nu)
     aL = sp.linear(p[L - 1], W[L - 1], b[L - 1])
-    z[L - 1] = sp.update_z_last(aL, z[L - 1], labels, label_mask, nu,
-                                config.fista_iters)
+    z[L - 1] = sp.update_z_last_reference(aL, z[L - 1], labels, label_mask,
+                                          nu, config.fista_iters)
 
     dual_res = []
     for l in range(L - 1):

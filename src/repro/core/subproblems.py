@@ -331,11 +331,72 @@ def ce_value_grad(z, labels, label_mask):
     return val, grad
 
 
-def update_z_last(a, z_old, labels, label_mask, nu, n_iters: int = 15):
+def ce_grad_cols(z, labels, label_mask, n_classes: Optional[int] = None):
+    """Masked-CE gradient on z[:, :n_classes], zero-padded back to z's width
+    — the risk gradient of BOTH z_L layouts: the single-host solve
+    (n_classes == width, pad is a no-op) and the distributed head-folded
+    layout where only the first C of h columns carry logits."""
+    C = z.shape[-1] if n_classes is None else n_classes
+    zc = z[:, :C]
+    g = (jax.nn.softmax(zc, axis=-1)
+         - jax.nn.one_hot(labels, C)) * label_mask[:, None]
+    if C == z.shape[-1]:
+        return g
+    return jnp.pad(g, ((0, 0), (0, z.shape[-1] - C)))
+
+
+def fista_prox(g_grad, z_old, step, n_iters: int):
+    """The generic FISTA loop  z⁺ = y − step·g_grad(y)  with Nesterov
+    momentum — the ONE implementation every z_L solver shares (the CE jnp
+    oracle below, `block_admm`'s arbitrary-risk solve, and the reference).
+    Same iteration map as the fused kernel's unrolled dispatches."""
+    def body(i, carry):
+        z_prev, z_cur, t = carry
+        t_new = (1.0 + jnp.sqrt(1.0 + 4.0 * t * t)) / 2.0
+        y = z_cur + ((t - 1.0) / t_new) * (z_cur - z_prev)
+        return z_cur, y - step * g_grad(y), t_new
+
+    _, z_fin, _ = jax.lax.fori_loop(0, n_iters, body,
+                                    (z_old, z_old - step * g_grad(z_old), 1.0))
+    return z_fin
+
+
+def fista_ce(a, z_old, labels, label_mask, nu, n_iters: int = 15,
+             n_classes: Optional[int] = None):
+    """Pure-jnp z_L solve: FISTA on min_z R(z;y) + (ν/2)||z − a||², R the
+    masked CE over z[:, :n_classes]. This is the `ref` side of the
+    `ops.fista_zlast` dispatch (`kernels/ref.py` delegates here)."""
+    step = 1.0 / (1.0 + nu)
+
+    def g_grad(z):
+        return ce_grad_cols(z, labels, label_mask, n_classes) + nu * (z - a)
+
+    return fista_prox(g_grad, z_old, step, n_iters)
+
+
+def update_z_last(a, z_old, labels, label_mask, nu, n_iters: int = 15,
+                  n_classes: Optional[int] = None, use_kernels: bool = True):
     """FISTA for min_z R(z;y) + (ν/2)||z - a||² (Eq. 7). R = summed CE.
 
     ∇R is 1-Lipschitz (softmax Jacobian ≼ I), so step = 1/(1+ν).
+
+    Dispatches through ``ops.fista_zlast`` (one fused Pallas kernel per
+    FISTA iteration under the `REPRO_KERNELS` policy); ``use_kernels=False``
+    stays on the local jnp loop. ``update_z_last_reference`` keeps the
+    pre-kernel code as the ground-truth oracle.
     """
+    if use_kernels:
+        from repro.kernels import ops
+        return ops.fista_zlast(a, z_old, labels, label_mask, nu=nu,
+                               n_iters=n_iters, n_classes=n_classes)
+    return fista_ce(a, z_old, labels, label_mask, nu, n_iters, n_classes)
+
+
+def update_z_last_reference(a, z_old, labels, label_mask, nu,
+                            n_iters: int = 15):
+    """The pre-kernel z_L solve (kept verbatim): per-iteration jnp dispatch
+    chain through `ce_value_grad`. Ground truth for the fused kernel's
+    differential battery and the `iterate_reference` oracle."""
     step = 1.0 / (1.0 + nu)
 
     def g_grad(z):

@@ -12,9 +12,9 @@ Dispatch policy (resolved per call, outside the jit boundary):
          magnitude slower than letting XLA fuse the jnp expression.
        * ``ref`` — force the jnp oracles (useful for A/B numerics).
        * ``pallas`` — force compiled Pallas (TPU runtimes).
-       * ``interpret`` — force Pallas in interpret mode (CI's bench-smoke
-         job runs the whole fast path this way so the kernel wiring is
-         exercised on every PR without TPU hardware).
+       * ``interpret`` — force Pallas in interpret mode (CI's interpret legs
+         run the whole fast path this way so the kernel wiring is exercised
+         on every PR without TPU hardware).
 
   2. Explicit ``use_pallas=True/False`` overrides the policy; with
      ``use_pallas=True``, ``interpret=None`` resolves to interpret mode on
@@ -22,19 +22,29 @@ Dispatch policy (resolved per call, outside the jit boundary):
      left as None implies the Pallas path (``interpret=False`` = compiled) —
      asking for an interpretation mode IS asking for the kernel.
 
-  3. Shape guard: the matmul kernels require 128-ish tile divisibility
-     (``M % min(bm, M) == 0`` etc.). When a Pallas path is selected but the
-     operand shapes cannot tile, dispatch silently falls back to ``ref``
-     rather than fail — ragged real-world sizes (e.g. V=2485 nodes) stay on
-     the XLA path, TPU-shaped workloads get the fused kernel.
+  3. Pad-to-tile: the matmul kernels want 128-ish tile divisibility. When a
+     Pallas path is selected and the operand shapes cannot tile, dispatch
+     zero-pads each dimension up to the kernel's tile (``padded_shape``
+     gives the exact plan per op), runs the kernel, and slices the true
+     shape back out — so ragged real-graph sizes (V = 2485, 2708, 3327,
+     ...) take the fused kernel instead of silently falling back to
+     ``ref``. Zero padding is exact for every op here: padded rows/columns
+     contribute nothing to contractions, and padded outputs are sliced off
+     (``backtrack_resnorm``'s scalar is untouched because every padded term
+     is 0 − 0). The padding happens INSIDE the jit'd dispatch body, so
+     pad/slice fuse around the kernel call.
 
 The policy is re-read on every call (cheap), but note each resolved variant
 is a separate jit specialization; flipping ``REPRO_KERNELS`` mid-process
 never reuses a stale compilation.
 
-Known kernel gaps (see ROADMAP "Open items"): the FISTA z_last solve and the
-packed-int4 psum have no Pallas implementation yet — they always take the
-jnp path.
+``fista_zlast`` is the fused z_L solve (Eq. 7): one Pallas dispatch per
+FISTA iteration (log-softmax + masked CE gradient + proximal term + momentum
+in-register), with the jnp loop ``ref.fista_zlast_ref`` as its oracle.
+
+Known kernel gaps (see ROADMAP "Open items"): the packed-int4 psum has no
+Pallas implementation (nibble-packed codes cannot be code-summed; needs a
+gather-based all-reduce) — it always takes the jnp path.
 """
 from __future__ import annotations
 
@@ -45,8 +55,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import (admm_pgrad as _pg, backtrack_phi as _bt,
-                           flash_attention as _fa, fused_linear as _fl,
-                           quantize_kernel as _qk, ref, relu_zupdate as _zu)
+                           fista_zlast as _fz, flash_attention as _fa,
+                           fused_linear as _fl, quantize_kernel as _qk, ref,
+                           relu_zupdate as _zu)
 
 POLICY_ENV = "REPRO_KERNELS"
 
@@ -72,8 +83,40 @@ def _resolve(use_pallas, interpret):
     return True, (not on_tpu) if interpret is None else interpret
 
 
-def _tiles(n: int, block: int) -> bool:
-    return n % min(block, n) == 0
+# ---------------------------------------------------------------------------
+# Pad-to-tile plans. Per dimension: (block, align) — a dimension n pads up to
+# a multiple of `block` when n >= block (so the kernel's min(block, n) tile
+# divides it), else up to a multiple of `align` (the TPU sublane/lane
+# granularity, and then the whole dimension IS the tile).
+# ---------------------------------------------------------------------------
+
+PAD_BLOCKS = {
+    "fused_linear": ((256, 8), (512, 128), (256, 128)),       # (M, K, N)
+    "admm_pgrad": ((256, 8), (256, 128), (256, 128)),         # (V, n_out, n_in)
+    "backtrack_resnorm": ((256, 8), (512, 128), (256, 128)),  # (M, K, N)
+    "fista_zlast": ((256, 8), (128, 128)),                    # (V, width)
+}
+
+
+def _pad_dim(n: int, block: int, align: int) -> int:
+    if n >= block:
+        return -(-n // block) * block
+    return -(-n // align) * align
+
+
+def padded_shape(op: str, dims) -> tuple:
+    """The logical shape the dispatch layer pads `dims` up to before calling
+    the `op` kernel (identity when the dims already tile). Introspection
+    surface for the pad-to-tile regression tests."""
+    return tuple(_pad_dim(n, blk, al)
+                 for n, (blk, al) in zip(dims, PAD_BLOCKS[op]))
+
+
+def _pad2(x, rows: int, cols: int):
+    r, c = x.shape
+    if (r, c) == (rows, cols):
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
 
 
 # ---------------------------------------------------------------------------
@@ -84,15 +127,18 @@ def _tiles(n: int, block: int) -> bool:
 def _fused_linear(p, W, b, z, *, mode, use_pallas, interpret):
     if not use_pallas:
         return ref.fused_linear_ref(p, W, b, z, mode=mode)
-    return _fl.fused_linear(p, W, b, z, mode=mode, interpret=interpret)
+    (M, K), N = p.shape, W.shape[1]
+    Mp, Kp, Np = padded_shape("fused_linear", (M, K, N))
+    out = _fl.fused_linear(
+        _pad2(p, Mp, Kp), _pad2(W, Kp, Np), jnp.pad(b, (0, Np - N)),
+        None if z is None else _pad2(z, Mp, Np),
+        mode=mode, interpret=interpret)
+    return out[:M, :N]
 
 
 def fused_linear(p, W, b, z=None, *, mode="linear", use_pallas=None,
                  interpret=None):
     up, it = _resolve(use_pallas, interpret)
-    if up and not (_tiles(p.shape[0], 256) and _tiles(p.shape[1], 512)
-                   and _tiles(W.shape[1], 256)):
-        up = False
     return _fused_linear(p, W, b, z, mode=mode, use_pallas=up, interpret=it)
 
 
@@ -101,14 +147,17 @@ def fused_linear(p, W, b, z=None, *, mode="linear", use_pallas=None,
 def _admm_pgrad(r, W, u, p, q, *, nu, rho, use_pallas, interpret):
     if not use_pallas:
         return ref.admm_pgrad_ref(r, W, u, p, q, nu=nu, rho=rho)
-    return _pg.admm_pgrad(r, W, u, p, q, nu=nu, rho=rho, interpret=interpret)
+    (V, n_out), n_in = r.shape, W.shape[0]
+    Vp, kp, np_ = padded_shape("admm_pgrad", (V, n_out, n_in))
+    out = _pg.admm_pgrad(
+        _pad2(r, Vp, kp), _pad2(W, np_, kp), _pad2(u, Vp, np_),
+        _pad2(p, Vp, np_), _pad2(q, Vp, np_),
+        nu=nu, rho=rho, interpret=interpret)
+    return out[:V, :n_in]
 
 
 def admm_pgrad(r, W, u, p, q, *, nu, rho, use_pallas=None, interpret=None):
     up, it = _resolve(use_pallas, interpret)
-    if up and not (_tiles(r.shape[0], 256) and _tiles(r.shape[1], 256)
-                   and _tiles(W.shape[0], 256)):
-        up = False
     return _admm_pgrad(r, W, u, p, q, nu=nu, rho=rho, use_pallas=up,
                        interpret=it)
 
@@ -117,16 +166,48 @@ def admm_pgrad(r, W, u, p, q, *, nu, rho, use_pallas=None, interpret=None):
 def _backtrack_resnorm(r0, d, W, *, use_pallas, interpret):
     if not use_pallas:
         return ref.backtrack_resnorm_ref(r0, d, W)
-    return _bt.backtrack_resnorm(r0, d, W, interpret=interpret)
+    (M, K), N = d.shape, W.shape[1]
+    Mp, Kp, Np = padded_shape("backtrack_resnorm", (M, K, N))
+    # zero padding adds only (0 - 0)² terms, so the scalar is exact
+    return _bt.backtrack_resnorm(_pad2(r0, Mp, Np), _pad2(d, Mp, Kp),
+                                 _pad2(W, Kp, Np), interpret=interpret)
 
 
 def backtrack_resnorm(r0, d, W, *, use_pallas=None, interpret=None):
     """||r0 - d @ W||² (the projected backtracking trial's data-fit term)."""
     up, it = _resolve(use_pallas, interpret)
-    if up and not (_tiles(d.shape[0], 256) and _tiles(d.shape[1], 512)
-                   and _tiles(W.shape[1], 256)):
-        up = False
     return _backtrack_resnorm(r0, d, W, use_pallas=up, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "n_iters", "n_classes",
+                                             "use_pallas", "interpret"))
+def _fista_zlast(a, z_old, labels, label_mask, *, nu, n_iters, n_classes,
+                 use_pallas, interpret):
+    if not use_pallas:
+        return ref.fista_zlast_ref(a, z_old, labels, label_mask, nu=nu,
+                                   n_iters=n_iters, n_classes=n_classes)
+    V, N = a.shape
+    C = N if n_classes is None else n_classes
+    Vp, Np = padded_shape("fista_zlast", (V, N))
+    # padded rows carry mask 0 (CE grad vanishes) and a = z = 0 (the prox
+    # flow keeps them at 0); padded columns sit outside n_classes
+    out = _fz.fista_zlast(
+        _pad2(a, Vp, Np), _pad2(z_old, Vp, Np),
+        jnp.pad(labels, (0, Vp - V)), jnp.pad(label_mask, (0, Vp - V)),
+        nu=nu, n_iters=n_iters, n_classes=C, interpret=interpret)
+    return out[:V, :N]
+
+
+def fista_zlast(a, z_old, labels, label_mask, *, nu, n_iters=15,
+                n_classes=None, use_pallas=None, interpret=None):
+    """Fused FISTA z_L solve (Eq. 7): min_z R(z;y) + (ν/2)||z − a||², R the
+    masked CE over z[:, :n_classes] (default: the full width). One Pallas
+    dispatch per FISTA iteration; `ref.fista_zlast_ref` on the jnp path."""
+    up, it = _resolve(use_pallas, interpret)
+    return _fista_zlast(a, z_old, labels, label_mask, nu=float(nu),
+                        n_iters=int(n_iters),
+                        n_classes=None if n_classes is None else int(n_classes),
+                        use_pallas=up, interpret=it)
 
 
 def grid_project(x, grid, *, use_pallas=None, interpret=None):

@@ -38,6 +38,15 @@ def grid_decode_ref(codes, grid, out_dtype=jnp.float32):
     return grid.decode(codes, out_dtype)
 
 
+def fista_zlast_ref(a, z_old, labels, label_mask, *, nu: float,
+                    n_iters: int = 15, n_classes=None):
+    """jnp oracle for the fused FISTA z_L kernel: the shared
+    `subproblems.fista_ce` loop (masked CE over the first `n_classes`
+    columns + proximal term, Nesterov momentum)."""
+    from repro.core.subproblems import fista_ce
+    return fista_ce(a, z_old, labels, label_mask, nu, n_iters, n_classes)
+
+
 def relu_zupdate_ref(a, q, z_old):
     from repro.core.subproblems import update_z_hidden
     return update_z_hidden(a.astype(jnp.float32), q.astype(jnp.float32),

@@ -94,34 +94,29 @@ def shift_from_next(x_loc, axis_name: str, grid: Optional[QuantGrid] = None):
 # One distributed iteration (runs inside shard_map, per (data, model) shard)
 # ---------------------------------------------------------------------------
 
-def _masked_ce_grad_val(z, labels, label_mask, n_classes: int):
-    """Risk on z[:, :C] (head folded into last layer)."""
+def _masked_ce_val(z, labels, label_mask, n_classes: int):
+    """Risk value on z[:, :C] (head folded into last layer). The matching
+    gradient lives in `subproblems.ce_grad_cols` and reaches the z-solve
+    only through the `ops.fista_zlast` dispatch."""
     zc = z[:, :n_classes]
     logp = jax.nn.log_softmax(zc, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
-    val = jnp.sum(nll * label_mask)
-    g = (jax.nn.softmax(zc, axis=-1) - jax.nn.one_hot(labels, n_classes)) \
-        * label_mask[:, None]
-    grad = jnp.pad(g, ((0, 0), (0, z.shape[1] - n_classes)))
-    return val, grad
+    return jnp.sum(nll * label_mask)
 
 
-def _fista_last(a, z_old, labels, label_mask, nu, n_classes, n_iters):
-    step = 1.0 / (1.0 + nu)
-
-    def g_grad(z):
-        _, gr = _masked_ce_grad_val(z, labels, label_mask, n_classes)
-        return gr + nu * (z - a)
-
-    def body(i, carry):
-        z_prev, z_cur, t = carry
-        t_new = (1.0 + jnp.sqrt(1.0 + 4.0 * t * t)) / 2.0
-        y = z_cur + ((t - 1.0) / t_new) * (z_cur - z_prev)
-        return z_cur, y - step * g_grad(y), t_new
-
-    _, z_fin, _ = jax.lax.fori_loop(
-        0, n_iters, body, (z_old, z_old - step * g_grad(z_old), 1.0))
-    return z_fin
+def _fista_last(a, z_old, labels, label_mask, nu, n_classes, n_iters,
+                use_kernels: bool = True):
+    """Head-folded z_L solve for a [M, V, h] layer stack: ONE
+    `subproblems.update_z_last` dispatch over the flattened rows
+    (labels/mask tiled per layer — the momentum schedule is row-independent,
+    so flattening is exact)."""
+    m = a.shape[0]
+    h = a.shape[-1]
+    z = sp.update_z_last(
+        a.reshape(-1, h), z_old.reshape(-1, h),
+        jnp.tile(labels, m), jnp.tile(label_mask, m),
+        nu, n_iters, n_classes=n_classes, use_kernels=use_kernels)
+    return z.reshape(a.shape)
 
 
 def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
@@ -208,9 +203,8 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         # ---- z-update (a = pW + b = z - r; matmul-free) --------------------
         a = st.z - r
         z_hidden = sp._zupdate(a, st.q, st.z, nu, uk)
-        z_last = jax.vmap(_fista_last,
-                          in_axes=(0, 0, None, None, None, None, None))(
-            a, st.z, labels, label_mask, nu, n_classes, config.fista_iters)
+        z_last = _fista_last(a, st.z, labels, label_mask, nu, n_classes,
+                             config.fista_iters, use_kernels=uk)
         z = jnp.where(is_last, z_last, z_hidden)
 
         # ---- q-update (needs p_{l+1} = next layer's NEW p) -------------------
@@ -226,7 +220,7 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
 
         # ---- metrics ------------------------------------------------------------
         res_sq = jax.lax.psum(jnp.sum(r * r), ("model",) + dp)
-        risk_val, _ = _masked_ce_grad_val(z[-1], labels, label_mask, n_classes)
+        risk_val = _masked_ce_val(z[-1], labels, label_mask, n_classes)
         risk_val = jnp.where(sidx == n_stages - 1, risk_val, 0.0)
         risk_val = jax.lax.psum(risk_val, "model")
         risk_val = jax.lax.psum(risk_val, dp) if dp else risk_val

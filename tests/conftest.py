@@ -1,7 +1,9 @@
 """Test-session bootstrap.
 
-Provides a minimal, deterministic stand-in for `hypothesis` when the real
-package is not installed (the pinned CI/container image ships without it).
+Shares the recursive jaxpr primitive counter used by the trace-level
+dispatch tests (`count_primitive`), and provides a minimal, deterministic
+stand-in for `hypothesis` when the real package is not installed (the
+pinned CI/container image ships without it).
 The shim implements exactly the API surface these tests use — ``given``,
 ``settings`` and the ``floats/integers/lists/sampled_from/composite``
 strategies — drawing a fixed number of pseudo-random examples from a
@@ -15,6 +17,23 @@ import sys
 import types
 
 import numpy as np
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive `name` in `jaxpr`, recursing into nested
+    (Closed)Jaxprs carried in eqn params (pjit bodies, loop bodies, ...)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for x in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(x, "jaxpr"):          # ClosedJaxpr
+                    n += count_primitive(x.jaxpr, name)
+                elif hasattr(x, "eqns"):         # raw Jaxpr
+                    n += count_primitive(x, name)
+    return n
+
 
 try:  # pragma: no cover - prefer the real thing when present
     import hypothesis  # noqa: F401

@@ -11,6 +11,8 @@ from repro.launch.steps import make_serve_step, make_train_step
 from repro.models.api import build
 from repro.train import optim
 
+pytestmark = pytest.mark.slow  # LM arch suite: no kernel-dispatch coverage
+
 SMOKE_TRAIN = ShapeConfig("smoke_train", 64, 2, "train")
 SMOKE_DECODE = ShapeConfig("smoke_decode", 64, 2, "decode")
 

@@ -1,11 +1,13 @@
-"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py."""
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py, and
+the pad-to-tile dispatch regression (ragged shapes must take the Pallas
+path, asserted at the trace level — not just by value)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.quantize import integer_grid, uniform_grid
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.admm_pgrad import admm_pgrad
 from repro.kernels.backtrack_phi import backtrack_resnorm
 from repro.kernels.flash_attention import flash_attention
@@ -115,6 +117,81 @@ def test_relu_zupdate(shape):
     tied = np.abs(np.asarray(obj(zn) - obj(zp))) < 1e-3
     np.testing.assert_allclose(np.asarray(got)[~tied], np.asarray(want)[~tied],
                                rtol=1e-5, atol=1e-5)
+
+
+# --- pad-to-tile dispatch regression ----------------------------------------
+#
+# Ragged real-graph shapes (V = 2485, 2708, 3327, ...) used to
+# fail the 128-tile divisibility guard and silently fall back to `ref`. The
+# dispatch layer now zero-pads up to the kernel tile and slices back, so the
+# Pallas path must fire — asserted by counting pallas_call primitives in the
+# lowered trace, not just by value equality.
+
+RAGGED = [(2485, 384, 6), (2708, 100, 7), (3327, 513, 129), (97, 130, 40)]
+
+
+def _pallas_calls(fn, *args) -> int:
+    from conftest import count_primitive
+    return count_primitive(jax.make_jaxpr(fn)(*args).jaxpr, "pallas_call")
+
+
+def test_padded_shape_plans_tile():
+    """Every pad plan lands on a kernel-tileable shape and is the identity
+    on already-aligned dims."""
+    for op, blocks in ops.PAD_BLOCKS.items():
+        aligned = tuple(blk for blk, _ in blocks)
+        assert ops.padded_shape(op, aligned) == aligned
+        for dims in [(1,) * len(blocks), (2485, 513, 129)[:len(blocks)]]:
+            padded = ops.padded_shape(op, dims)
+            for n, pn, (blk, al) in zip(dims, padded, blocks):
+                assert pn >= n and pn % min(blk, pn) == 0 and pn % al == 0
+
+
+@pytest.mark.parametrize("M,K,N", RAGGED)
+@pytest.mark.parametrize("mode", ["linear", "residual"])
+def test_pad_to_tile_fused_linear(M, K, N, mode):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    p, W = _rand(ks[0], (M, K), jnp.float32), _rand(ks[1], (K, N), jnp.float32)
+    W = W / np.sqrt(K)
+    b, z = _rand(ks[2], (N,), jnp.float32), _rand(ks[3], (M, N), jnp.float32)
+    run = lambda *a: ops.fused_linear(*a, mode=mode, interpret=True)
+    assert _pallas_calls(run, p, W, b, z) == 1           # Pallas path fired
+    assert _pallas_calls(
+        lambda *a: ops.fused_linear(*a, mode=mode, use_pallas=False),
+        p, W, b, z) == 0                                  # and ref has none
+    np.testing.assert_allclose(
+        np.asarray(run(p, W, b, z)),
+        np.asarray(ref.fused_linear_ref(p, W, b, z, mode=mode)),
+        **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("M,K,N", RAGGED)
+def test_pad_to_tile_backtrack_resnorm(M, K, N):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    r0 = _rand(ks[0], (M, N), jnp.float32)
+    d = _rand(ks[1], (M, K), jnp.float32) * 0.1
+    W = _rand(ks[2], (K, N), jnp.float32) / np.sqrt(K)
+    run = lambda *a: ops.backtrack_resnorm(*a, interpret=True)
+    assert _pallas_calls(run, r0, d, W) == 1
+    assert _pallas_calls(
+        lambda *a: ops.backtrack_resnorm(*a, use_pallas=False), r0, d, W) == 0
+    np.testing.assert_allclose(float(run(r0, d, W)),
+                               float(ref.backtrack_resnorm_ref(r0, d, W)),
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("V,ni,no", [(2485, 96, 6), (97, 130, 40)])
+def test_pad_to_tile_admm_pgrad(V, ni, no):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r = _rand(ks[0], (V, no), jnp.float32)
+    W = _rand(ks[1], (ni, no), jnp.float32) / np.sqrt(ni)
+    u, p, q = (_rand(k, (V, ni), jnp.float32) for k in ks[2:])
+    run = lambda *a: ops.admm_pgrad(*a, nu=0.01, rho=1.0, interpret=True)
+    assert _pallas_calls(run, r, W, u, p, q) == 1
+    np.testing.assert_allclose(
+        np.asarray(run(r, W, u, p, q)),
+        np.asarray(ref.admm_pgrad_ref(r, W, u, p, q, nu=0.01, rho=1.0)),
+        **TOL[jnp.float32])
 
 
 @pytest.mark.parametrize("B,H,S,T,D", [(1, 2, 128, 128, 64),

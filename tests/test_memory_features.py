@@ -10,6 +10,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import layers as L
 from repro.train import optim
 
+pytestmark = pytest.mark.slow  # LM memory suite: no kernel-dispatch coverage
+
 
 def _rosenbrockish(params):
     return jnp.sum((params["a"] - 1.0) ** 2) \

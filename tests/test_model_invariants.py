@@ -12,6 +12,8 @@ from repro.models import layers as L
 from repro.models import mamba2 as M2
 from repro.models.api import build
 
+pytestmark = pytest.mark.slow  # LM model suite: no kernel-dispatch coverage
+
 
 @pytest.fixture(scope="module")
 def mesh():

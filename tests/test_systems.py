@@ -20,6 +20,8 @@ from repro.serve.engine import Request, ServingEngine
 from repro.train import optim
 from repro.train.trainer import Trainer, TrainerConfig
 
+pytestmark = pytest.mark.slow  # LM system suite: no kernel-dispatch coverage
+
 
 # --- checkpointing ------------------------------------------------------------
 
