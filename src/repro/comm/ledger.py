@@ -59,6 +59,17 @@ class CommLedger:
         return self.record(iteration, edge, "handshake", n_scalars, 32,
                            4 * n_scalars)
 
+    def record_span(self, start_iteration: int, n_iterations: int, edge: str,
+                    kind: str, elements: int, bits: int,
+                    payload_bytes: Optional[int] = None) -> List[WireRecord]:
+        """Record the same per-iteration payload once for each iteration in
+        [start, start + n): the rollup entry point for chunked scan drivers,
+        which learn about a whole chunk's traffic at one host sync. Rollups
+        (`per_iteration`, `iteration_bytes`, ...) see exactly what n
+        individual `record` calls would have produced."""
+        return [self.record(start_iteration + i, edge, kind, elements, bits,
+                            payload_bytes) for i in range(int(n_iterations))]
+
     # -- rollups -----------------------------------------------------------
     def total_bytes(self) -> int:
         return sum(r.payload_bytes for r in self.records)

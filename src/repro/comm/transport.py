@@ -15,22 +15,35 @@ step is each shard's rounding (unbiased under stochastic rounding).
 from __future__ import annotations
 
 import dataclasses
+import operator
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.comm.codecs import (FP32, AffineCodec, Fp32Codec, GridCodec,
-                               WireCodec)
+                               WireCodec, WirePayload)
 
 
 def axis_size(axis_name: str):
-    """`jax.lax.axis_size` compat (older JAX exposes it via core.axis_frame,
-    which returns the static size directly)."""
+    """`jax.lax.axis_size` compat. Older JAX exposes the size via
+    ``jax.core.axis_frame``, which returns the static int on some 0.4.x
+    releases and a frame OBJECT (with a ``.size`` attribute) on others —
+    normalize both to a plain Python int and refuse anything else loudly
+    (``operator.index`` raises TypeError on a non-integral frame)."""
     try:
         return jax.lax.axis_size(axis_name)
     except AttributeError:
-        return jax.core.axis_frame(axis_name)
+        frame = jax.core.axis_frame(axis_name)
+        try:
+            return operator.index(frame)        # already an integral size
+        except TypeError:
+            size = getattr(frame, "size", None)
+            if size is None:
+                raise TypeError(
+                    f"axis_frame({axis_name!r}) returned {frame!r}; "
+                    "expected an integral size or a frame with `.size`")
+            return operator.index(size)
 
 
 # ---------------------------------------------------------------------------
@@ -44,32 +57,72 @@ class NeighborExchange:
     The payload is the boundary slab only (one layer of the local stack);
     interior layers move by a local roll, exactly as in the paper's
     layer-client pipeline.
+
+    Every shift comes in two halves so the runtime can hide the message
+    latency behind independent compute (double-buffered overlap):
+
+      * ``start_shift_*``  — encode the boundary slab and ISSUE the
+        ``ppermute``; returns the in-flight :class:`WirePayload` (a carryable
+        pytree — e.g. through a ``lax.scan`` carry across iterations),
+      * ``finish_shift_*`` — decode the arrived payload and concatenate it
+        with the locally-rolled interior layers.
+
+    ``shift_from_prev``/``shift_from_next`` are exactly
+    ``finish(start(x), x)`` — the eager composition — so split and fused
+    call sites are bitwise-identical by construction.
     """
 
     axis_name: str
     codec: WireCodec = FP32
 
-    def _permute(self, x, perm):
-        payload = self.codec.encode(x)
-        moved = jax.tree.map(
+    def _start(self, boundary, perm) -> WirePayload:
+        payload = self.codec.encode(boundary)
+        return jax.tree.map(
             lambda t: jax.lax.ppermute(t, self.axis_name, perm), payload)
-        return self.codec.decode(moved, shape=x.shape, dtype=x.dtype)
+
+    # -- forward shift (out[i] = x[i-1]) ------------------------------------
+    def start_shift_from_prev(self, x_loc) -> WirePayload:
+        """Encode x_loc[-1:] and issue the forward boundary ppermute; the
+        returned in-flight payload is consumed by `finish_shift_from_prev`
+        (possibly next iteration, with the same x_loc values)."""
+        n = axis_size(self.axis_name)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        return self._start(x_loc[-1:], perm)
+
+    def finish_shift_from_prev(self, payload: WirePayload, x_loc):
+        """Decode an in-flight forward payload and splice it in: out[i] =
+        x[i-1], out[0] fetched from the previous stage (garbage into global
+        layer 0 — masked by the caller)."""
+        boundary = self.codec.decode(payload, shape=x_loc[-1:].shape,
+                                     dtype=x_loc.dtype)
+        return jnp.concatenate([boundary, x_loc[:-1]], axis=0)
 
     def shift_from_prev(self, x_loc):
         """out[i] = x[i-1]; out[0] fetched from the previous stage (garbage
         into global layer 0 — masked by the caller)."""
+        return self.finish_shift_from_prev(self.start_shift_from_prev(x_loc),
+                                           x_loc)
+
+    # -- backward shift (out[i] = x[i+1]) -----------------------------------
+    def start_shift_from_next(self, x_loc) -> WirePayload:
+        """Encode x_loc[:1] and issue the backward boundary ppermute."""
         n = axis_size(self.axis_name)
-        perm = [(i, (i + 1) % n) for i in range(n)]
-        boundary = self._permute(x_loc[-1:], perm)
-        return jnp.concatenate([boundary, x_loc[:-1]], axis=0)
+        perm = [(i, (i - 1) % n) for i in range(n)]
+        return self._start(x_loc[:1], perm)
+
+    def finish_shift_from_next(self, payload: WirePayload, x_loc):
+        """Decode an in-flight backward payload and splice it in: out[i] =
+        x[i+1], out[-1] fetched from the next stage (garbage into global
+        layer L-1 — masked by the caller)."""
+        boundary = self.codec.decode(payload, shape=x_loc[:1].shape,
+                                     dtype=x_loc.dtype)
+        return jnp.concatenate([x_loc[1:], boundary], axis=0)
 
     def shift_from_next(self, x_loc):
         """out[i] = x[i+1]; out[-1] fetched from the next stage (garbage into
         global layer L-1 — masked by the caller)."""
-        n = axis_size(self.axis_name)
-        perm = [(i, (i - 1) % n) for i in range(n)]
-        boundary = self._permute(x_loc[:1], perm)
-        return jnp.concatenate([x_loc[1:], boundary], axis=0)
+        return self.finish_shift_from_next(self.start_shift_from_next(x_loc),
+                                           x_loc)
 
     def wire_bytes(self, boundary_shape) -> int:
         """Exact bytes one shift puts on one link."""

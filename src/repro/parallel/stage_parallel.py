@@ -30,10 +30,11 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.comm.codecs import FP32, WireCodec, codec_for_grid
+from repro.comm.codecs import (FP32, Fp32Codec, GridCodec, WireCodec,
+                               WirePayload, codec_for_grid)
 from repro.comm.transport import NeighborExchange
 from repro.core import subproblems as sp
-from repro.core.pdadmm import ADMMConfig, relu
+from repro.core.pdadmm import ADMMConfig, relu, run_chunked
 from repro.core.quantize import QuantGrid
 
 
@@ -90,6 +91,33 @@ def shift_from_next(x_loc, axis_name: str, grid: Optional[QuantGrid] = None):
         .shift_from_next(x_loc)
 
 
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def stack_partition_specs(mesh: Mesh) -> StackState:
+    """PartitionSpecs of a :class:`StackState` on `mesh`: layers over the
+    `model` axis, nodes over the data axes, W/b replicated over data."""
+    dp = _dp_axes(mesh)
+    return StackState(
+        p=P("model", dp), W=P("model"), b=P("model"),
+        z=P("model", dp), q=P("model", dp), u=P("model", dp))
+
+
+def _payload_spec(codec: WireCodec, dp) -> WirePayload:
+    """PartitionSpec tree of one in-flight boundary payload as a GLOBAL
+    array (the `overlap=True` scan carry): header-free codecs only — the
+    stage ring's grid/fp32 wire keeps the slab shape [1, V_loc, h] per
+    shard (nibble-packed int4 flattens, so every axis rides dim 0)."""
+    if not isinstance(codec, (Fp32Codec, GridCodec)):
+        raise ValueError(
+            "overlap carries in-flight encoded slabs across iterations, "
+            "which needs a header-free wire format (grid or fp32 codec); "
+            f"got {codec.name}")
+    codes = P(("model",) + dp) if codec.bits <= 4 else P("model", dp)
+    return WirePayload(codes, None, None)
+
+
 # ---------------------------------------------------------------------------
 # One distributed iteration (runs inside shard_map, per (data, model) shard)
 # ---------------------------------------------------------------------------
@@ -124,15 +152,34 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
                           donate: bool = False,
                           p_codec: Optional[WireCodec] = None,
                           q_codec: Optional[WireCodec] = None):
-    """Build the jit-able distributed ADMM iteration.
+    """Build the jit-able distributed ADMM iteration; returns (step, specs).
 
-    overlap=True issues the neighbor exchanges BEFORE the W/b/z solves that
-    do not consume them (compute/comm overlap — §Perf hillclimb knob; the
-    default False is the paper-faithful ordering).
+    overlap=False (the paper-faithful ordering): ``step(state, Xp, labels,
+    label_mask) -> (state, metrics)``, with every boundary exchange fused —
+    encode, ppermute and decode issued exactly where the value is consumed.
+
+    overlap=True (double-buffered boundary slabs): ``step((state, inflight),
+    Xp, labels, label_mask) -> ((state, inflight), metrics)``. The q/u
+    forward exchange that iteration k+1 consumes *at entry* is STARTED at
+    the end of iteration k (right after the q/dual updates produce those
+    exact values) and only FINISHED — decoded and spliced — at the entry of
+    k+1, so the in-flight encoded slabs cross the iteration boundary in the
+    carry and the ring messages hide behind the tail metrics psums and the
+    entry residual computation. The within-iteration backward p exchange is
+    likewise started right after the p-solve and finished right before the
+    q-update that consumes it, putting the whole W/b/z solve family between
+    issue and use. Because every shift exchanges exactly the values the
+    non-overlap ordering exchanges (the split halves compose to the fused
+    shift), overlap=True is bitwise-identical in state and metrics — it
+    changes WHEN bytes move, never what or how many. Prime the first
+    iteration's carry with :func:`make_overlap_primer` (or use
+    ``distributed_train(..., overlap=True)``, which does both).
 
     `p_codec`/`q_codec` override the wire format derived from `config` (the
     adaptive controller path swaps codecs between cached compilations; the
     wire format is static per compiled step, so SPMD stages stay uniform).
+    overlap requires header-free codecs (grid/fp32 — the stage-ring formats)
+    because the in-flight payload is carried as a plain sharded array.
     """
     nu, rho = config.nu, config.rho
     p_grid = config.grid if config.quantize_p else None
@@ -144,27 +191,35 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
     ex_p = NeighborExchange("model", p_codec)
     ex_q = NeighborExchange("model", q_codec)
     ex_u = NeighborExchange("model", FP32)
-    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = _dp_axes(mesh)
     n_stages = mesh.shape["model"]
     assert L % n_stages == 0, (L, n_stages)
     m_loc = L // n_stages
 
-    stack_specs = StackState(
-        p=P("model", dp), W=P("model"), b=P("model"),
-        z=P("model", dp), q=P("model", dp), u=P("model", dp))
-    lab_spec = P(dp)
+    stack_specs = stack_partition_specs(mesh)
 
     uk = config.use_kernels
 
-    def stage_body(st: StackState, Xp, labels, label_mask):
+    def stage_body(carry, Xp, labels, label_mask):
+        if overlap:
+            st, (q_fly, u_fly) = carry
+        else:
+            st = carry
         sidx = jax.lax.axis_index("model")
         gidx = sidx * m_loc + jnp.arange(m_loc)          # global layer ids
         is_first = (gidx == 0)[:, None, None]
         is_last = (gidx == L - 1)[:, None, None]
 
         # ---- neighbor exchange (prev iteration values) -------------------
-        q_prev = ex_q.shift_from_prev(st.q)
-        u_prev = ex_u.shift_from_prev(st.u)
+        # overlap: the ppermutes were issued at the END of the previous
+        # iteration (same values — st.q/st.u ARE that iteration's outputs);
+        # only decode+splice happens here.
+        if overlap:
+            q_prev = ex_q.finish_shift_from_prev(q_fly, st.q)
+            u_prev = ex_u.finish_shift_from_prev(u_fly, st.u)
+        else:
+            q_prev = ex_q.shift_from_prev(st.q)
+            u_prev = ex_u.shift_from_prev(st.u)
         q_prev = jnp.where(is_first, 0.0, q_prev)        # layer 0 has no prev
         u_prev = jnp.where(is_first, 0.0, u_prev)
 
@@ -184,6 +239,12 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
                                        u_prev, r)
         p = jnp.where(is_first, Xp[None], p_new)
         r = jnp.where(is_first, r, r_new)    # layer 0 keeps the Xp residual
+
+        # overlap: issue the backward p exchange as soon as the p-solve is
+        # done — the W/b/z solves below never read p_next, so the message
+        # rides under them and is finished right before the q-update.
+        if overlap:
+            p_fly = ex_p.start_shift_from_next(p)
 
         # ---- W-update ------------------------------------------------------
         def W_upd(p_, W_, b_, z_, qp, up, r_):
@@ -208,7 +269,8 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         z = jnp.where(is_last, z_last, z_hidden)
 
         # ---- q-update (needs p_{l+1} = next layer's NEW p) -------------------
-        p_next = ex_p.shift_from_next(p)
+        p_next = (ex_p.finish_shift_from_next(p_fly, p) if overlap
+                  else ex_p.shift_from_next(p))
         fz = relu(z)
         q = jax.vmap(sp.update_q, in_axes=(0, 0, 0, None, None, None))(
             p_next, st.u, fz, nu, rho, q_grid)
@@ -217,6 +279,14 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         # ---- dual update ------------------------------------------------------
         r = jnp.where(is_last, 0.0, p_next - q)
         u = st.u + rho * r
+
+        # overlap: q and u now hold exactly the values the NEXT iteration's
+        # entry exchange would send — start the forward shifts here so the
+        # ring messages fly under the metrics psums below and next entry's
+        # residual computation, and carry the encoded slabs across.
+        if overlap:
+            out_fly = (ex_q.start_shift_from_prev(q),
+                       ex_u.start_shift_from_prev(u))
 
         # ---- metrics ------------------------------------------------------------
         res_sq = jax.lax.psum(jnp.sum(r * r), ("model",) + dp)
@@ -228,8 +298,9 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
                                 r + (z - st.z), q_prev, u_prev,
                                 is_first, is_last, nu, rho)
         lag = jax.lax.psum(lag, ("model",) + dp) + risk_val
-        return StackState(p, W, b, z, q, u), {
-            "residual": jnp.sqrt(res_sq), "objective": lag}
+        new = StackState(p, W, b, z, q, u)
+        metrics = {"residual": jnp.sqrt(res_sq), "objective": lag}
+        return ((new, out_fly) if overlap else new), metrics
 
     def _local_lagrangian(st, rr, q_prev, u_prev, is_first, is_last, nu, rho):
         # rr = z - pW - b at the NEW iterate, chained from the update family
@@ -241,95 +312,220 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         val += jnp.sum(u_prev * d) + 0.5 * rho * jnp.sum(d * d)
         return val
 
+    if overlap:
+        carry_specs = (stack_specs, (_payload_spec(q_codec, dp),
+                                     _payload_spec(FP32, dp)))
+    else:
+        carry_specs = stack_specs
     smapped = shard_map(
         stage_body, mesh=mesh,
-        in_specs=(stack_specs, P(dp), P(dp), P(dp)),
-        out_specs=(stack_specs, P()),
+        in_specs=(carry_specs, P(dp), P(dp), P(dp)),
+        out_specs=(carry_specs, P()),
         check_rep=False)
 
     return jax.jit(smapped, donate_argnums=(0,) if donate else ()), stack_specs
 
 
+def make_overlap_primer(mesh: Mesh, q_codec: WireCodec = FP32):
+    """Start the FIRST iteration's forward q/u boundary exchange for an
+    ``overlap=True`` step: ``prime(q, u) -> (q_payload, u_payload)`` — the
+    in-flight carry half. `q_codec` must match the step's q wire (u always
+    flies fp32, as in `make_distributed_step`)."""
+    dp = _dp_axes(mesh)
+    ex_q = NeighborExchange("model", q_codec)
+    ex_u = NeighborExchange("model", FP32)
+
+    def prime(q, u):
+        return (ex_q.start_shift_from_prev(q), ex_u.start_shift_from_prev(u))
+
+    return jax.jit(shard_map(
+        prime, mesh=mesh,
+        in_specs=(P("model", dp), P("model", dp)),
+        out_specs=(_payload_spec(q_codec, dp), _payload_spec(FP32, dp)),
+        check_rep=False))
+
+
+def shard_rows(V: int, dp_total: int) -> tuple:
+    """Per-data-shard row counts of a length-V axis split `dp_total` ways,
+    under JAX's ceil-partition of uneven axes (shard i holds rows
+    [i*ceil(V/n), (i+1)*ceil(V/n)) clipped to V — trailing shards may be
+    short or empty). Sums to V exactly for every (V, n)."""
+    c = -(-V // dp_total)
+    return tuple(max(0, min(V, (i + 1) * c) - i * c) for i in range(dp_total))
+
+
 def wire_bytes_per_iteration(mesh, L: int, V: int, h: int,
                              p_codec: WireCodec, q_codec: WireCodec) -> dict:
     """Exact global bytes one distributed iteration puts on the stage ring:
-    every stage sends its boundary slab [1, V_loc, h] per data shard — q and
-    u forward, p backward."""
+    every stage sends its boundary slab [1, rows_i, h] per data shard — q
+    and u forward, p backward. Ragged V (real-graph node counts that don't
+    divide the data mesh) is accounted per shard: each shard's slab is
+    charged at its own `codec.payload_bytes`, so remainder rows are never
+    dropped and per-shard container rounding (int4 packing) is exact."""
     n_stages = mesh.shape["model"]
     assert L % n_stages == 0, (L, n_stages)
     dp_total = 1
     for a in ("pod", "data"):
         dp_total *= mesh.shape.get(a, 1)
-    slab = (1, V // dp_total, h)
-    links = n_stages * dp_total
+    rows = shard_rows(V, dp_total)
+
+    def edge_bytes(codec):
+        return n_stages * sum(codec.payload_bytes((1, r, h)) for r in rows)
+
     return {
-        "q_fwd": links * q_codec.payload_bytes(slab),
-        "u_fwd": links * FP32.payload_bytes(slab),
-        "p_bwd": links * p_codec.payload_bytes(slab),
-        "slab_elements": (V // dp_total) * h,
-        "links": links,
+        "q_fwd": edge_bytes(q_codec),
+        "u_fwd": edge_bytes(FP32),
+        "p_bwd": edge_bytes(p_codec),
+        "elements_per_edge": n_stages * V * h,   # == n_stages * sum(rows) * h
+        "shard_rows": rows,
+        "links": n_stages * dp_total,
     }
+
+
+def _record_ring_span(ledger, start: int, n: int, mesh, L, V, h,
+                      p_codec: WireCodec, q_codec: WireCodec) -> None:
+    """Record `n` iterations of ring traffic (q/u forward, p backward) in
+    one shot — the chunked driver's per-chunk rollup."""
+    wb = wire_bytes_per_iteration(mesh, L, V, h, p_codec, q_codec)
+    n_el = wb["elements_per_edge"]
+    ledger.record_span(start, n, "q_fwd", "ppermute", n_el, q_codec.bits,
+                       wb["q_fwd"])
+    ledger.record_span(start, n, "u_fwd", "ppermute", n_el, 32, wb["u_fwd"])
+    ledger.record_span(start, n, "p_bwd", "ppermute", n_el, p_codec.bits,
+                       wb["p_bwd"])
+
+
+def _record_qu_pair(ledger, iteration: int, mesh, L, V, h,
+                    p_codec: WireCodec, q_codec: WireCodec,
+                    suffix: str) -> None:
+    """Charge one q+u forward slab pair that crossed the link outside the
+    consumed per-iteration traffic: the in-flight tail a finished overlap
+    run leaves in its carry (``/inflight``) or slabs superseded by a
+    schedule change (``/dropped``). Bytes on the wire are bytes on the
+    ledger, consumed or not."""
+    wb = wire_bytes_per_iteration(mesh, L, V, h, p_codec, q_codec)
+    n_el = wb["elements_per_edge"]
+    ledger.record(iteration, "q_fwd/" + suffix, "ppermute", n_el,
+                  q_codec.bits, wb["q_fwd"])
+    ledger.record(iteration, "u_fwd/" + suffix, "ppermute", n_el, 32,
+                  wb["u_fwd"])
 
 
 def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
                       config: ADMMConfig, epochs: int, *, ledger=None,
-                      controller=None, grids_by_bits=None):
+                      controller=None, grids_by_bits=None,
+                      overlap: bool = False, chunk: int = 32):
     """End-to-end stage-parallel training loop (small meshes / tests).
 
-    With a `ledger`, every iteration's ring traffic is recorded edge-by-edge.
-    With a `controller` (+ `grids_by_bits`), the p/q wire bit-width is chosen
-    each iteration from the global primal residual; SPMD keeps one wire
-    format per compiled step, so schedule changes swap between cached
-    compilations (hysteresis bounds how many exist).
+    The no-controller path rides a chunked ``lax.scan`` driver
+    (``pdadmm.run_chunked``): metrics stay on device inside each chunk, so
+    the host syncs once per `chunk` iterations instead of every epoch. With
+    ``overlap=True`` the double-buffered boundary exchange's in-flight
+    encoded slabs are part of the scan carry (primed once before the loop);
+    results are bitwise-identical to ``overlap=False``.
+
+    With a `ledger`, every iteration's ring traffic is recorded edge-by-edge
+    (whole chunks at a time on the scan path). With a `controller`
+    (+ `grids_by_bits`), the p/q wire bit-width is chosen each epoch from
+    the global primal residual; SPMD keeps one wire format per compiled
+    step, so schedule changes swap between cached compilations — built
+    LAZILY, so only schedules that actually run compile (observable as
+    ``hist["n_compiled_steps"]``). A schedule change under overlap re-primes
+    the carry with the new wire format.
+
+    Overlap ledger accounting: the N consumed per-iteration exchanges are
+    recorded identically to ``overlap=False`` (overlap changes when bytes
+    move, not how many an iteration consumes), and every in-flight slab
+    pair that crossed the link WITHOUT being consumed is charged explicitly
+    — the tail pair a finished run leaves in its carry (``*/inflight`` at
+    iteration `epochs`) and any pair superseded by a schedule change
+    (``*/dropped``). Bytes on the wire are bytes on the ledger.
     """
     V, h = Xp.shape
     state = init_stack(key, Xp, L, config)
-    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = _dp_axes(mesh)
+    specs = stack_partition_specs(mesh)
 
     step_cache = {}
 
+    def codecs_for(bits):
+        if bits is None:
+            return (codec_for_grid(config.grid if config.quantize_p
+                                   else None),
+                    codec_for_grid(config.grid if config.quantize_q
+                                   else None))
+        codec = codec_for_grid(grids_by_bits[bits])
+        return codec, codec
+
     def step_for(bits):
         if bits not in step_cache:
-            if bits is None:
-                step_cache[bits] = make_distributed_step(
-                    mesh, L, n_classes, config)
-            else:
-                codec = codec_for_grid(grids_by_bits[bits])
-                step_cache[bits] = make_distributed_step(
-                    mesh, L, n_classes, config,
-                    p_codec=codec, q_codec=codec)
+            pc, qc = codecs_for(bits)
+            step_cache[bits] = make_distributed_step(
+                mesh, L, n_classes, config, overlap=overlap,
+                p_codec=pc, q_codec=qc)[0]
         return step_cache[bits]
 
-    step, specs = step_for(None if controller is None
-                           else controller.schedule[0])
+    primer_cache = {}
+
+    def prime(bits, st):
+        if bits not in primer_cache:
+            primer_cache[bits] = make_overlap_primer(mesh,
+                                                     codecs_for(bits)[1])
+        return primer_cache[bits](st.q, st.u)
+
     put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))
     state = jax.tree.map(lambda x, s: put(x, s), state, specs)
     Xp_s = put(Xp, P(dp))
     lab = put(labels, P(dp))
     msk = put(masks["train"], P(dp))
     hist = {"objective": [], "residual": [], "schedules": []}
-    residual = 0.0
-    for e in range(epochs):
-        if controller is not None:
+
+    if controller is None:
+        p_codec, q_codec = codecs_for(None)
+        step = step_for(None)
+        carry = (state, prime(None, state)) if overlap else state
+        carry, ms = run_chunked(step, carry, (Xp_s, lab, msk), epochs,
+                                chunk=chunk)
+        state = carry[0] if overlap else carry
+        hist["objective"] = [float(x) for x in ms.get("objective", ())]
+        hist["residual"] = [float(x) for x in ms.get("residual", ())]
+        if ledger is not None and epochs > 0:
+            _record_ring_span(ledger, 0, epochs, mesh, L, V, h,
+                              p_codec, q_codec)
+            if overlap:   # the tail pair still in flight in the carry
+                _record_qu_pair(ledger, epochs, mesh, L, V, h,
+                                p_codec, q_codec, "inflight")
+    else:
+        residual = 0.0
+        inflight, cur_bits = None, None
+        for e in range(epochs):
             (bits,) = controller.assign([residual], e)
             hist["schedules"].append(bits)
-            step, _ = step_for(bits)
-            p_codec = q_codec = codec_for_grid(grids_by_bits[bits])
-        else:
-            p_codec = codec_for_grid(
-                config.grid if config.quantize_p else None)
-            q_codec = codec_for_grid(
-                config.grid if config.quantize_q else None)
-        state, m = step(state, Xp_s, lab, msk)
-        residual = float(m["residual"])
-        hist["objective"].append(float(m["objective"]))
-        hist["residual"].append(residual)
-        if ledger is not None:
-            wb = wire_bytes_per_iteration(mesh, L, V, h, p_codec, q_codec)
-            n_el = wb["links"] * wb["slab_elements"]
-            ledger.record(e, "q_fwd", "ppermute", n_el, q_codec.bits,
-                          wb["q_fwd"])
-            ledger.record(e, "u_fwd", "ppermute", n_el, 32, wb["u_fwd"])
-            ledger.record(e, "p_bwd", "ppermute", n_el, p_codec.bits,
-                          wb["p_bwd"])
+            step = step_for(bits)
+            p_codec, q_codec = codecs_for(bits)
+            if overlap:
+                if inflight is None or bits != cur_bits:
+                    if inflight is not None and ledger is not None:
+                        # superseded in-flight slabs (old wire format)
+                        # already crossed the link — account for them
+                        old_pc, old_qc = codecs_for(cur_bits)
+                        _record_qu_pair(ledger, e, mesh, L, V, h,
+                                        old_pc, old_qc, "dropped")
+                    inflight = prime(bits, state)
+                    cur_bits = bits
+                (state, inflight), m = step((state, inflight), Xp_s, lab,
+                                            msk)
+            else:
+                state, m = step(state, Xp_s, lab, msk)
+            residual = float(m["residual"])
+            hist["objective"].append(float(m["objective"]))
+            hist["residual"].append(residual)
+            if ledger is not None:
+                _record_ring_span(ledger, e, 1, mesh, L, V, h,
+                                  p_codec, q_codec)
+        if overlap and ledger is not None and epochs > 0:
+            # the tail pair still in flight in the carry at termination
+            _record_qu_pair(ledger, epochs, mesh, L, V, h,
+                            *codecs_for(cur_bits), "inflight")
+    hist["n_compiled_steps"] = len(step_cache)
     return state, hist

@@ -211,6 +211,23 @@ def test_ledger_per_iteration_rollup():
     assert led.summary()["bytes_per_iteration"] == 100.0
 
 
+def test_ledger_record_span_matches_per_iteration_records():
+    """The chunked-driver rollup == n individual records, iteration by
+    iteration (same totals, same per-iteration map, same edge rollups)."""
+    a, b = CommLedger(), CommLedger()
+    a.record_span(3, 5, "q_fwd", "ppermute", 200, 8, 220)
+    for i in range(5):
+        b.record(3 + i, "q_fwd", "ppermute", 200, 8, 220)
+    assert a.per_iteration() == b.per_iteration() == {
+        3 + i: 220 for i in range(5)}
+    assert a.per_edge() == b.per_edge()
+    assert a.total_bytes() == b.total_bytes()
+    assert a.baseline_fp32_bytes() == b.baseline_fp32_bytes()
+    # default byte computation (no explicit payload_bytes) matches too
+    a.record_span(0, 2, "x", "psum", 10, 4)
+    assert a.iteration_bytes(0) == 5  # ceil(10 * 4 / 8)
+
+
 # --- adaptive training loop (single-host wire model) -----------------------
 
 def test_train_adaptive_legacy_pq_layout():
@@ -279,6 +296,62 @@ def test_train_adaptive_managed_u_beats_fixed8_savings():
     assert led.total_bytes() < 0.5 * led.baseline_fp32_bytes()
     assert led.savings_vs_fp32() > 0.5
     assert hist["test_acc"][-1] > 0.5
+
+
+# --- axis_size compat fallback ----------------------------------------------
+
+
+def test_axis_size_fallback_normalizes_frames(monkeypatch):
+    """`jax.core.axis_frame` returns a plain int on some 0.4.x releases and
+    a frame OBJECT (with `.size`) on others — the compat shim must hand back
+    a real int either way, and refuse non-integral frames loudly."""
+    import jax as _jax
+
+    from repro.comm import transport
+    if hasattr(_jax.lax, "axis_size"):
+        pytest.skip("jax.lax.axis_size exists; the fallback path is unused")
+    # int-returning axis_frame (the pinned 0.4.37 behavior)
+    monkeypatch.setattr(_jax.core, "axis_frame", lambda name: 4)
+    n = transport.axis_size("model")
+    assert n == 4 and type(n) is int
+    # frame-object variants normalize through `.size`
+    frame = type("Frame", (), {"size": 7})()
+    monkeypatch.setattr(_jax.core, "axis_frame", lambda name: frame)
+    assert transport.axis_size("model") == 7
+    # numpy integral sizes collapse to a plain int
+    monkeypatch.setattr(_jax.core, "axis_frame", lambda name: np.int64(3))
+    n = transport.axis_size("model")
+    assert n == 3 and type(n) is int
+    # anything non-integral is a loud TypeError, not a silent bad size
+    monkeypatch.setattr(_jax.core, "axis_frame",
+                        lambda name: type("Odd", (), {})())
+    with pytest.raises(TypeError):
+        transport.axis_size("model")
+
+
+def test_axis_size_inside_shard_map():
+    """On the pinned jax the fallback is the LIVE path: axis_size must
+    return the static int under a shard_map trace (NeighborExchange builds
+    its ppermute ring from it)."""
+    out = _run(PRELUDE + """
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.comm.transport import axis_size
+
+sizes = []
+def f(x):
+    n = axis_size("model")
+    assert type(n) is int, type(n)
+    sizes.append(n)
+    return x * n
+sm = shard_map(f, mesh=mesh, in_specs=(P("model"),), out_specs=P("model"),
+               check_rep=False)
+y = sm(jnp.ones((8, 2)))
+assert sizes and all(n == 4 for n in sizes), sizes
+assert np.allclose(np.asarray(y), 4.0)
+print("AXIS_SIZE_OK")
+""")
+    assert "AXIS_SIZE_OK" in out
 
 
 # --- distributed transport (multi-device subprocess) ------------------------
