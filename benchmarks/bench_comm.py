@@ -15,10 +15,20 @@ The `overlap` row measures the OTHER half of the comm win (AdaQP's insight:
 hide the latency, don't just shrink the message): distributed step wall time
 with the double-buffered boundary exchange on vs off, plus the
 ppermute-schedule introspection (carried in-flight starts / solve work
-between issue and consume) proving the messages left the critical path. It
-runs in a subprocess with 8 forced CPU devices so the device-count flag
-never leaks into this process; `--smoke` runs only this row and writes
-BENCH_comm.json (the CI bench-smoke artifact).
+between issue and consume) proving the messages left the critical path.
+
+The `allreduce` row makes the quantized psum PHYSICAL: int32 code-sum psum
+vs the gather-based packed all-reduce (int4 nibbles in a uint8 container)
+at 8 simulated CPU devices — wall time plus ledger-verified wire bytes
+(gather ships < 1/4 of the int32 path at int4), decode bit-identity
+asserted in-run. The `mixed_width` row runs the padded-container wire under
+the per-boundary controller: n_compiled_steps (exactly 1 across every
+schedule) and active-codec bytes saved vs pinning every boundary to the
+widest width.
+
+Each row runs in a subprocess with 8 forced CPU devices so the device-count
+flag never leaks into this process; `--smoke` runs all three at small
+shapes and writes BENCH_comm.json (the CI bench-smoke artifact).
 """
 from __future__ import annotations
 
@@ -181,8 +191,172 @@ def bench_overlap(smoke: bool = False):
     write_csv("comm_overlap", header, rows)
     print_rows("comm_overlap (double-buffered boundary exchange)", header,
                rows)
-    (ROOT / "BENCH_comm.json").write_text(json.dumps(data, indent=2) + "\n")
     return data
+
+
+_ALLREDUCE_SNIPPET = """
+import os, json, time
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import compat_make_mesh
+from repro.comm import CommLedger, transport
+from repro.comm.codecs import GridCodec
+from repro.core.quantize import uniform_grid
+from repro.comm.transport import record_psum
+
+W, V, h, iters = 8, %(V)d, %(h)d, %(iters)d
+mesh = compat_make_mesh((W,), ("data",))
+codec = GridCodec(uniform_grid(4, -3.0, 3.0))
+x = jax.random.normal(jax.random.PRNGKey(0), (W * V, h))
+
+def run(mode):
+    def f(xx):
+        return transport.quantized_psum(xx, "data", codec, mode=mode)
+    sm = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("data"),),
+                           out_specs=P("data"), check_rep=False))
+    y = sm(x); jax.block_until_ready(y)         # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y = sm(x)
+    jax.block_until_ready(y)
+    ms = (time.perf_counter() - t0) / iters * 1e3
+    led = CommLedger()                          # ledger-verified, per shard
+    cost = record_psum(led, 0, "allreduce", codec, (V, h), W, mode=mode)
+    return ms, led.total_wire_bytes(), led.total_bytes(), np.asarray(y), cost
+
+g_ms, g_wire, g_logical, g_y, g_cost = run("gather")
+c_ms, c_wire, c_logical, c_y, c_cost = run("code_psum")
+assert np.array_equal(g_y, c_y)                 # bit-identical decode
+assert transport.psum_mode(codec, W) == "gather"
+assert g_wire < 0.25 * c_wire, (g_wire, c_wire) # the acceptance bar
+print(json.dumps({
+    "world": W, "elements": V * h, "bits": codec.bits, "iters": iters,
+    "gather_ms": round(g_ms, 3), "code_psum_ms": round(c_ms, 3),
+    "gather_wire_bytes": int(g_wire), "code_psum_wire_bytes": int(c_wire),
+    "logical_bytes": int(g_logical),
+    "wire_ratio": round(g_wire / c_wire, 4),
+    "selected_mode": transport.psum_mode(codec, W),
+    "bit_identical": True,
+}))
+"""
+
+
+def bench_allreduce(smoke: bool = False):
+    """int32 code-sum psum vs gather-based packed all-reduce for an int4
+    codec at 8 simulated CPU devices: wall time + LEDGER-verified physical
+    bytes (the packed uint8 container vs the int32 message each shard
+    injects), decode bit-identity asserted in-run."""
+    V, h, iters = (256, 32, 20) if smoke else (2048, 64, 50)
+    code = _ALLREDUCE_SNIPPET % {"V": V, "h": h, "iters": iters}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    data = json.loads(r.stdout.strip().splitlines()[-1])
+    header = ["path", "wall_ms", "wire_bytes_per_shard", "logical_bytes"]
+    rows = [
+        ["code_psum_int32", data["code_psum_ms"],
+         data["code_psum_wire_bytes"], data["logical_bytes"]],
+        ["gather_packed_int4", data["gather_ms"],
+         data["gather_wire_bytes"], data["logical_bytes"]],
+    ]
+    write_csv("comm_allreduce", header, rows)
+    print_rows("comm_allreduce (physical quantized all-reduce, int4 @ 8 "
+               "devices)", header, rows)
+    return data
+
+
+_MIXED_SNIPPET = """
+import os, json
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.launch.mesh import compat_make_mesh
+from repro.core.pdadmm import ADMMConfig
+from repro.core import quantize
+from repro.comm import BitWidthController, CommLedger, ControllerConfig
+from repro.comm.controller import stage_ring_edges
+from repro.graph.datasets import tiny
+from repro.parallel import stage_parallel as SP
+
+V, h, L, epochs = %(V)d, %(h)d, %(L)d, %(epochs)d
+mesh = compat_make_mesh((2, 4), ("data", "model"))
+n_stages = 4
+ds = tiny(V=V)
+X = ds.augmented(4)
+key = jax.random.PRNGKey(0)
+P0 = jax.random.normal(key, (X.shape[1], h)) * jnp.sqrt(2.0 / X.shape[1])
+Xp = jnp.maximum(X @ P0, 0)
+grids = {b: quantize.uniform_grid(b, -2.0, 6.0) for b in (4, 8, 16)}
+ctl = BitWidthController(
+    stage_ring_edges(n_stages, V, h),
+    ControllerConfig(allowed_bits=(4, 8, 16), min_bits=4, max_bits=16,
+                     min_dwell=1, hysteresis=0.0, signal="per_edge",
+                     thresholds=((0.5, 4), (0.1, 8))))
+led = CommLedger()
+cfg = ADMMConfig(nu=1e-2, rho=1.0)
+_, hist = SP.distributed_train(mesh, key, Xp, ds.labels, ds.masks, L,
+                               ds.n_classes, cfg, epochs=epochs,
+                               controller=ctl, grids_by_bits=grids,
+                               ledger=led, mixed_width=True)
+assert hist["n_compiled_steps"] == 1, hist["n_compiled_steps"]
+wire = SP.PaddedWire.from_grids(grids)
+uniform = epochs * (
+    2 * sum(SP.container_wire_bytes_per_iteration(
+        mesh, L, V, h, wire, (wire.widest,) * n_stages,
+        (wire.widest,) * n_stages)["q_fwd"]))
+mixed = sum(v for e, v in led.per_edge().items()
+            if e.startswith(("q_fwd/s", "p_bwd/s")))
+print(json.dumps({
+    "epochs": epochs, "n_stages": n_stages,
+    "n_compiled_steps": hist["n_compiled_steps"],
+    "n_distinct_schedules": len(set(hist["schedules"])),
+    "mixed_pq_logical_bytes": int(mixed),
+    "uniform_widest_pq_bytes": int(uniform),
+    "bytes_saved_vs_uniform": round(1 - mixed / uniform, 4),
+    "container_wire_bytes": int(sum(
+        v for e, v in led.per_edge_wire().items()
+        if e.startswith(("q_fwd/s", "p_bwd/s")))),
+}))
+"""
+
+
+def bench_mixed_width(smoke: bool = False):
+    """Per-boundary mixed bit-widths through the padded-container wire:
+    n_compiled_steps (exactly 1 across every schedule the controller emits)
+    and active-codec bytes saved vs running every boundary at the widest
+    width — the schedule the single-format SPMD step would otherwise be
+    pinned to."""
+    V, h, L, epochs = (64, 32, 8, 10) if smoke else (256, 64, 8, 30)
+    code = _MIXED_SNIPPET % {"V": V, "h": h, "L": L, "epochs": epochs}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    data = json.loads(r.stdout.strip().splitlines()[-1])
+    assert data["n_compiled_steps"] == 1, data
+    header = ["n_compiled_steps", "n_distinct_schedules",
+              "mixed_pq_logical_bytes", "uniform_widest_pq_bytes",
+              "bytes_saved_vs_uniform"]
+    rows = [[data[k] for k in header]]
+    write_csv("comm_mixed_width", header, rows)
+    print_rows("comm_mixed_width (padded containers, one compiled step)",
+               header, rows)
+    return data
+
+
+def write_bench_json(**rows):
+    (ROOT / "BENCH_comm.json").write_text(
+        json.dumps(rows, indent=2) + "\n")
+
+
+def run_smoke():
+    write_bench_json(overlap=bench_overlap(smoke=True),
+                     allreduce=bench_allreduce(smoke=True),
+                     mixed_width=bench_mixed_width(smoke=True))
 
 
 def run(epochs: int = 30, hidden: int = 100, layers: int = 10):
@@ -209,15 +383,18 @@ def run(epochs: int = 30, hidden: int = 100, layers: int = 10):
               "test_acc"]
     write_csv("fig5_comm_overheads", header, rows)
     print_rows("fig5_comm_overheads (paper Fig 5 + adaptive)", header, rows)
-    bench_overlap()
+    write_bench_json(overlap=bench_overlap(),
+                     allreduce=bench_allreduce(),
+                     mixed_width=bench_mixed_width())
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="overlap row only, small shapes (CI artifact)")
+                    help="overlap/allreduce/mixed_width rows only, small "
+                         "shapes (CI artifact)")
     if ap.parse_args().smoke:
-        bench_overlap(smoke=True)
+        run_smoke()
     else:
         run()

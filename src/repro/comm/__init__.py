@@ -18,12 +18,16 @@ from repro.comm.codecs import (AffineCodec, Fp32Codec, GridCodec, WireCodec,
                                encode_with_error_feedback)
 from repro.comm.controller import BitWidthController, ControllerConfig
 from repro.comm.ledger import CommLedger
-from repro.comm.transport import (NeighborExchange, psum_with_error_feedback,
-                                  quantized_psum)
+from repro.comm.transport import (ContainerExchange, NeighborExchange,
+                                  PaddedWire, PsumWireCost, psum_mode,
+                                  psum_wire_bytes, psum_with_error_feedback,
+                                  quantized_psum, record_psum)
 
 __all__ = [
     "AffineCodec", "Fp32Codec", "GridCodec", "WireCodec",
     "codec_for_bits", "codec_for_grid", "encode_with_error_feedback",
     "BitWidthController", "ControllerConfig", "CommLedger",
-    "NeighborExchange", "psum_with_error_feedback", "quantized_psum",
+    "ContainerExchange", "NeighborExchange", "PaddedWire", "PsumWireCost",
+    "psum_mode", "psum_wire_bytes", "psum_with_error_feedback",
+    "quantized_psum", "record_psum",
 ]

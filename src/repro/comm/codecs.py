@@ -71,18 +71,58 @@ def _container_dtype(bits: int):
     return jnp.uint8 if bits <= 8 else jnp.uint16
 
 
+def pack_codes_jnp(codes: jax.Array, bits: int) -> jax.Array:
+    """Canonical packing of integer codes into their physical uint8
+    container — the subsystem-wide wire LAYOUT CONTRACT, mirrored
+    bit-for-bit by the fused Pallas kernels in ``kernels/pack_codes.py``
+    (dispatched as ``ops.pack_codes`` on the hot collective paths):
+
+      * ``bits <= 4``  — pad to an even length ``n2`` and half-split: byte
+        ``i`` = code ``i`` in the high nibble, code ``i + n2/2`` in the
+        low nibble (two contiguous reads; no strided lane access),
+      * ``bits <= 8``  — identity (uint8 codes ARE the container),
+      * ``bits <= 16`` — big-endian byte planes: all high bytes, then all
+        low bytes.
+
+    Output length is exactly ``_body_bytes(bits, codes.size)``.
+    """
+    flat = codes.ravel()
+    if bits <= 4:
+        flat = flat.astype(jnp.uint8)
+        if flat.shape[0] % 2:
+            flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.uint8)])
+        h = flat.shape[0] // 2
+        return ((flat[:h] << 4) | (flat[h:] & 0xF)).astype(jnp.uint8)
+    if bits <= 8:
+        return flat.astype(jnp.uint8)
+    c = flat.astype(jnp.uint16)
+    return jnp.concatenate([(c >> 8).astype(jnp.uint8),
+                            (c & 0xFF).astype(jnp.uint8)])
+
+
+def unpack_codes_jnp(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_codes_jnp`: the first `n` codes, in the
+    container dtype (uint8 for <= 8 bits, uint16 above)."""
+    if bits <= 4:
+        h = (n + 1) // 2
+        b = packed[:h]
+        return jnp.concatenate([(b >> 4) & 0xF, b & 0xF])[:n] \
+            .astype(jnp.uint8)
+    if bits <= 8:
+        return packed[:n].astype(jnp.uint8)
+    hi = packed[:n].astype(jnp.uint16)
+    lo = packed[n:2 * n].astype(jnp.uint16)
+    return ((hi << 8) | lo).astype(jnp.uint16)
+
+
 def _pack_nibbles(codes: jax.Array) -> jax.Array:
-    """Two 4-bit codes per byte (static shapes under trace; pad odd tails)."""
-    flat = codes.astype(jnp.uint8).ravel()
-    if flat.shape[0] % 2:
-        flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.uint8)])
-    return (flat[0::2] << 4) | (flat[1::2] & 0xF)
+    """Two 4-bit codes per byte (static shapes under trace; pad odd tails).
+    Half-split layout — see :func:`pack_codes_jnp`."""
+    return pack_codes_jnp(codes, 4)
 
 
 def _unpack_nibbles(packed: jax.Array, n: int) -> jax.Array:
-    hi = (packed >> 4) & 0xF
-    lo = packed & 0xF
-    return jnp.stack([hi, lo], axis=-1).ravel()[:n]
+    return unpack_codes_jnp(packed, 4, n)
 
 
 def _body_bytes(bits: int, n: int) -> int:

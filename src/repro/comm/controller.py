@@ -193,6 +193,21 @@ class BitWidthController:
 # uniform wire format per step — see parallel/stage_parallel.py).
 # ---------------------------------------------------------------------------
 
+def stage_ring_edges(n_stages: int, V: int, h: int,
+                     split_pq: bool = False) -> List[int]:
+    """Managed-edge element counts for the DISTRIBUTED stage ring under the
+    padded-container wire (``distributed_train(mixed_width=True)``): one
+    edge per ring boundary moving the q-forward + p-backward slab pair
+    (``2 * V * h`` elements), or — with ``split_pq`` — separate q edges
+    followed by p edges so the controller can format the two directions
+    independently. Unlike the single-host `admm_edges` layout, these edges
+    are genuinely per-boundary inside ONE compiled SPMD step: schedule
+    changes swap a traced widths table, not compilations."""
+    if split_pq:
+        return [V * h] * (2 * n_stages)
+    return [2 * V * h] * n_stages
+
+
 def admm_edges(dims, V: int) -> List[int]:
     """Managed-edge element counts for `train_adaptive`: per boundary l, one
     p/q edge (q_l forward + p_{l+1} backward: 2*V*n_l elements) followed by

@@ -7,10 +7,21 @@ shared-scale all-reduce. Records carry *exact* byte counts from the codec
 bit-width controller read totals from one place instead of re-deriving
 formulas.
 
-Accounting model: bytes are what the codec emits per logical payload. The
-int32 in-flight accumulator XLA may use inside a code-``psum`` ring is an
-implementation detail and is not charged; the scalar handshake of the
-shared-scale path IS charged (8 bytes) because it is a real extra message.
+Accounting model — every record carries a physical-vs-logical byte split:
+
+  * ``payload_bytes`` (logical) — what the codec's math implies the payload
+    occupies (packed body + header). This is the number the compression
+    story is told in (savings-vs-fp32, budgets, Fig-5 rows).
+  * ``wire_bytes`` (physical) — what the message ACTUALLY occupies on the
+    link: the int32 container a code-psum ships whatever the codec says,
+    or the fixed capacity of a padded wire container. Defaults to
+    ``payload_bytes`` when the two coincide (plain codec-formatted
+    ppermutes, gather-based packed payloads).
+
+Ring replication factors inside a collective (the in-flight accumulator of
+a psum, the forwarded chunks of an all-gather) are algorithm details and
+are not charged; the scalar handshake of the shared-scale path IS charged
+(8 bytes) because it is a real extra message.
 """
 from __future__ import annotations
 
@@ -27,7 +38,12 @@ class WireRecord:
     kind: str            # "ppermute" | "psum" | "handshake"
     elements: int
     bits: int
-    payload_bytes: int   # exact: body (packed/container) + header
+    payload_bytes: int   # logical: codec body (packed/container) + header
+    wire_bytes: int = -1   # physical bytes on the link (-1 -> == payload)
+
+    def __post_init__(self):
+        if self.wire_bytes < 0:
+            object.__setattr__(self, "wire_bytes", self.payload_bytes)
 
 
 class CommLedger:
@@ -38,11 +54,13 @@ class CommLedger:
 
     # -- recording ---------------------------------------------------------
     def record(self, iteration: int, edge: str, kind: str, elements: int,
-               bits: int, payload_bytes: Optional[int] = None) -> WireRecord:
+               bits: int, payload_bytes: Optional[int] = None,
+               wire_bytes: Optional[int] = None) -> WireRecord:
         if payload_bytes is None:  # logical size, no header
             payload_bytes = math.ceil(elements * bits / 8)
         rec = WireRecord(iteration, edge, kind, int(elements), int(bits),
-                         int(payload_bytes))
+                         int(payload_bytes),
+                         -1 if wire_bytes is None else int(wire_bytes))
         self.records.append(rec)
         return rec
 
@@ -61,18 +79,32 @@ class CommLedger:
 
     def record_span(self, start_iteration: int, n_iterations: int, edge: str,
                     kind: str, elements: int, bits: int,
-                    payload_bytes: Optional[int] = None) -> List[WireRecord]:
+                    payload_bytes: Optional[int] = None,
+                    wire_bytes: Optional[int] = None) -> List[WireRecord]:
         """Record the same per-iteration payload once for each iteration in
         [start, start + n): the rollup entry point for chunked scan drivers,
         which learn about a whole chunk's traffic at one host sync. Rollups
         (`per_iteration`, `iteration_bytes`, ...) see exactly what n
         individual `record` calls would have produced."""
         return [self.record(start_iteration + i, edge, kind, elements, bits,
-                            payload_bytes) for i in range(int(n_iterations))]
+                            payload_bytes, wire_bytes)
+                for i in range(int(n_iterations))]
 
     # -- rollups -----------------------------------------------------------
     def total_bytes(self) -> int:
+        """Logical (codec-accounted) bytes — the compression story."""
         return sum(r.payload_bytes for r in self.records)
+
+    def total_wire_bytes(self) -> int:
+        """Physical bytes on the links — containers and int32 code-psum
+        messages charged at the width they actually ship."""
+        return sum(r.wire_bytes for r in self.records)
+
+    def per_edge_wire(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for r in self.records:
+            out[r.edge] += r.wire_bytes
+        return dict(out)
 
     def iteration_bytes(self, iteration: int) -> int:
         return sum(r.payload_bytes for r in self.records
@@ -104,6 +136,10 @@ class CommLedger:
         its = self.per_iteration()
         return {
             "total_bytes": self.total_bytes(),
+            # physical split: bytes the links actually carried
+            # ("payload_bytes_physical" is the documented alias)
+            "wire_bytes": self.total_wire_bytes(),
+            "payload_bytes_physical": self.total_wire_bytes(),
             "baseline_fp32_bytes": self.baseline_fp32_bytes(),
             "savings_vs_fp32": self.savings_vs_fp32(),
             "iterations": len(its),

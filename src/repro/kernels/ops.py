@@ -42,9 +42,13 @@ never reuses a stale compilation.
 FISTA iteration (log-softmax + masked CE gradient + proximal term + momentum
 in-register), with the jnp loop ``ref.fista_zlast_ref`` as its oracle.
 
-Known kernel gaps (see ROADMAP "Open items"): the packed-int4 psum has no
-Pallas implementation (nibble-packed codes cannot be code-summed; needs a
-gather-based all-reduce) — it always takes the jnp path.
+``pack_codes``/``unpack_codes`` format integer wire codes into their
+physical uint8 container (half-split nibbles for int4, byte planes for
+int16; the layout contract is ``comm.codecs.pack_codes_jnp``). They are the
+fused half of the gather-based packed all-reduce and the padded-container
+boundary exchange in ``comm/transport.py`` — the former "packed-int4 psum"
+kernel gap. Packing is elementwise, so there is no tile-divisibility guard:
+ragged streams take the single-block fallback.
 """
 from __future__ import annotations
 
@@ -56,8 +60,8 @@ import jax.numpy as jnp
 
 from repro.kernels import (admm_pgrad as _pg, backtrack_phi as _bt,
                            fista_zlast as _fz, flash_attention as _fa,
-                           fused_linear as _fl, quantize_kernel as _qk, ref,
-                           relu_zupdate as _zu)
+                           fused_linear as _fl, pack_codes as _pk,
+                           quantize_kernel as _qk, ref, relu_zupdate as _zu)
 
 POLICY_ENV = "REPRO_KERNELS"
 
@@ -208,6 +212,38 @@ def fista_zlast(a, z_old, labels, label_mask, *, nu, n_iters=15,
                         n_iters=int(n_iters),
                         n_classes=None if n_classes is None else int(n_classes),
                         use_pallas=up, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas",
+                                             "interpret"))
+def _pack_codes(codes, *, bits, use_pallas, interpret):
+    if not use_pallas:
+        return ref.pack_codes_ref(codes, bits)
+    return _pk.pack_codes(codes, bits, interpret=interpret)
+
+
+def pack_codes(codes, bits, *, use_pallas=None, interpret=None):
+    """Pack flat integer wire codes to their physical width: a uint8
+    container of exactly ``codecs._body_bytes(bits, codes.size)`` bytes
+    (int4 half-split nibbles / int8 identity / int16 byte planes)."""
+    up, it = _resolve(use_pallas, interpret)
+    return _pack_codes(codes, bits=int(bits), use_pallas=up, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "use_pallas",
+                                             "interpret"))
+def _unpack_codes(packed, *, bits, n, use_pallas, interpret):
+    if not use_pallas:
+        return ref.unpack_codes_ref(packed, bits, n)
+    return _pk.unpack_codes(packed, bits, n, interpret=interpret)
+
+
+def unpack_codes(packed, bits, n, *, use_pallas=None, interpret=None):
+    """Inverse of :func:`pack_codes`: the first `n` codes in the container
+    dtype (uint8 for <= 8 bits, uint16 above)."""
+    up, it = _resolve(use_pallas, interpret)
+    return _unpack_codes(packed, bits=int(bits), n=int(n), use_pallas=up,
+                         interpret=it)
 
 
 def grid_project(x, grid, *, use_pallas=None, interpret=None):

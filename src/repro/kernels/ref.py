@@ -47,6 +47,19 @@ def fista_zlast_ref(a, z_old, labels, label_mask, *, nu: float,
     return fista_ce(a, z_old, labels, label_mask, nu, n_iters, n_classes)
 
 
+def pack_codes_ref(codes, bits: int):
+    """jnp oracle for the wire-container pack kernel: the canonical layout
+    lives in `repro.comm.codecs.pack_codes_jnp` (half-split nibbles /
+    identity bytes / big-endian byte planes)."""
+    from repro.comm.codecs import pack_codes_jnp
+    return pack_codes_jnp(codes, bits)
+
+
+def unpack_codes_ref(packed, bits: int, n: int):
+    from repro.comm.codecs import unpack_codes_jnp
+    return unpack_codes_jnp(packed, bits, n)
+
+
 def relu_zupdate_ref(a, q, z_old):
     from repro.core.subproblems import update_z_hidden
     return update_z_hidden(a.astype(jnp.float32), q.astype(jnp.float32),

@@ -21,19 +21,25 @@ from repro.comm.codecs import AffineCodec
 
 
 def quantized_psum(x, axis_name: str, *, bits: int = 8,
-                   key: Optional[jax.Array] = None):
+                   key: Optional[jax.Array] = None,
+                   mode: Optional[str] = None):
     """psum(x) with the payload quantized to `bits` (shared-scale affine:
-    scalar min/max handshake, exact int32 code-sum, one lossy rounding;
-    unbiased stochastic rounding iff `key` is supplied)."""
-    return transport.quantized_psum(x, axis_name, AffineCodec(bits), key=key)
+    scalar min/max handshake, one lossy rounding; unbiased stochastic
+    rounding iff `key` is supplied). The physical collective — packed
+    all-gather vs int32 code-psum, bit-identical values — follows the
+    transport cost model unless `mode` pins it."""
+    return transport.quantized_psum(x, axis_name, AffineCodec(bits), key=key,
+                                    mode=mode)
 
 
 def psum_with_error_feedback(grad, err, axis_name: str, *, bits: int = 8,
-                             key: Optional[jax.Array] = None
+                             key: Optional[jax.Array] = None,
+                             mode: Optional[str] = None
                              ) -> Tuple[jax.Array, jax.Array]:
     """Compressed psum of (grad + carried error); returns (summed, new_error)."""
     return transport.psum_with_error_feedback(grad, err, axis_name,
-                                              AffineCodec(bits), key=key)
+                                              AffineCodec(bits), key=key,
+                                              mode=mode)
 
 
 def compressed_grad_tree(grads, errs, axis_name: str, *, bits: int = 8):

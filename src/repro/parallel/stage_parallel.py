@@ -32,7 +32,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.comm.codecs import (FP32, Fp32Codec, GridCodec, WireCodec,
                                WirePayload, codec_for_grid)
-from repro.comm.transport import NeighborExchange
+from repro.comm.transport import (ContainerExchange, NeighborExchange,
+                                  PaddedWire)
 from repro.core import subproblems as sp
 from repro.core.pdadmm import ADMMConfig, relu, run_chunked
 from repro.core.quantize import QuantGrid
@@ -109,6 +110,9 @@ def _payload_spec(codec: WireCodec, dp) -> WirePayload:
     array (the `overlap=True` scan carry): header-free codecs only — the
     stage ring's grid/fp32 wire keeps the slab shape [1, V_loc, h] per
     shard (nibble-packed int4 flattens, so every axis rides dim 0)."""
+    if isinstance(codec, PaddedWire):
+        # flat uint8 container per shard: every axis rides dim 0
+        return P(("model",) + dp)
     if not isinstance(codec, (Fp32Codec, GridCodec)):
         raise ValueError(
             "overlap carries in-flight encoded slabs across iterations, "
@@ -151,7 +155,8 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
                           config: ADMMConfig, *, overlap: bool = False,
                           donate: bool = False,
                           p_codec: Optional[WireCodec] = None,
-                          q_codec: Optional[WireCodec] = None):
+                          q_codec: Optional[WireCodec] = None,
+                          wire: Optional[PaddedWire] = None):
     """Build the jit-able distributed ADMM iteration; returns (step, specs).
 
     overlap=False (the paper-faithful ordering): ``step(state, Xp, labels,
@@ -180,10 +185,22 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
     wire format is static per compiled step, so SPMD stages stay uniform).
     overlap requires header-free codecs (grid/fp32 — the stage-ring formats)
     because the in-flight payload is carried as a plain sharded array.
+
+    `wire` (a :class:`PaddedWire`) switches the p/q boundary exchange to
+    padded fixed-size uint8 containers: the step then takes a trailing
+    ``widths`` argument — an int32 ``[2, n_stages]`` table (row 0 = q sel,
+    row 1 = p sel; indices into ``wire.widths``) — and each stage's
+    exchanges run at ITS OWN traced bit-width while the compiled program
+    (and the physical ppermute payload, sized for the widest codec) stays
+    schedule-independent: per-boundary, per-iteration mixed widths with
+    exactly one compilation. Mutually exclusive with `p_codec`/`q_codec`;
+    u still flies fp32.
     """
     nu, rho = config.nu, config.rho
     p_grid = config.grid if config.quantize_p else None
     q_grid = config.grid if config.quantize_q else None
+    assert wire is None or (p_codec is None and q_codec is None), \
+        "wire= (padded containers) replaces the static p/q codecs"
     if p_codec is None:
         p_codec = codec_for_grid(p_grid)
     if q_codec is None:
@@ -191,6 +208,7 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
     ex_p = NeighborExchange("model", p_codec)
     ex_q = NeighborExchange("model", q_codec)
     ex_u = NeighborExchange("model", FP32)
+    cex = None if wire is None else ContainerExchange("model", wire)
     dp = _dp_axes(mesh)
     n_stages = mesh.shape["model"]
     assert L % n_stages == 0, (L, n_stages)
@@ -200,7 +218,7 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
 
     uk = config.use_kernels
 
-    def stage_body(carry, Xp, labels, label_mask):
+    def stage_body(carry, Xp, labels, label_mask, widths=None):
         if overlap:
             st, (q_fly, u_fly) = carry
         else:
@@ -209,14 +227,25 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         gidx = sidx * m_loc + jnp.arange(m_loc)          # global layer ids
         is_first = (gidx == 0)[:, None, None]
         is_last = (gidx == L - 1)[:, None, None]
+        if cex is not None:
+            # active widths: mine for encodes, the ORIGINATING stage's for
+            # decodes (everyone reads the same replicated table)
+            sel_q, sel_p = widths[0, sidx], widths[1, sidx]
+            sel_q_prev = widths[0, jnp.mod(sidx - 1, n_stages)]
+            sel_p_next = widths[1, jnp.mod(sidx + 1, n_stages)]
 
         # ---- neighbor exchange (prev iteration values) -------------------
         # overlap: the ppermutes were issued at the END of the previous
         # iteration (same values — st.q/st.u ARE that iteration's outputs);
         # only decode+splice happens here.
         if overlap:
-            q_prev = ex_q.finish_shift_from_prev(q_fly, st.q)
+            q_prev = (cex.finish_shift_from_prev(q_fly, st.q, sel_q_prev)
+                      if cex is not None
+                      else ex_q.finish_shift_from_prev(q_fly, st.q))
             u_prev = ex_u.finish_shift_from_prev(u_fly, st.u)
+        elif cex is not None:
+            q_prev = cex.shift_from_prev(st.q, sel_q, sel_q_prev)
+            u_prev = ex_u.shift_from_prev(st.u)
         else:
             q_prev = ex_q.shift_from_prev(st.q)
             u_prev = ex_u.shift_from_prev(st.u)
@@ -244,7 +273,8 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         # done — the W/b/z solves below never read p_next, so the message
         # rides under them and is finished right before the q-update.
         if overlap:
-            p_fly = ex_p.start_shift_from_next(p)
+            p_fly = (cex.start_shift_from_next(p, sel_p) if cex is not None
+                     else ex_p.start_shift_from_next(p))
 
         # ---- W-update ------------------------------------------------------
         def W_upd(p_, W_, b_, z_, qp, up, r_):
@@ -269,8 +299,13 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         z = jnp.where(is_last, z_last, z_hidden)
 
         # ---- q-update (needs p_{l+1} = next layer's NEW p) -------------------
-        p_next = (ex_p.finish_shift_from_next(p_fly, p) if overlap
-                  else ex_p.shift_from_next(p))
+        if cex is not None:
+            p_next = (cex.finish_shift_from_next(p_fly, p, sel_p_next)
+                      if overlap else
+                      cex.shift_from_next(p, sel_p, sel_p_next))
+        else:
+            p_next = (ex_p.finish_shift_from_next(p_fly, p) if overlap
+                      else ex_p.shift_from_next(p))
         fz = relu(z)
         q = jax.vmap(sp.update_q, in_axes=(0, 0, 0, None, None, None))(
             p_next, st.u, fz, nu, rho, q_grid)
@@ -285,11 +320,19 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         # ring messages fly under the metrics psums below and next entry's
         # residual computation, and carry the encoded slabs across.
         if overlap:
-            out_fly = (ex_q.start_shift_from_prev(q),
+            out_fly = ((cex.start_shift_from_prev(q, sel_q)
+                        if cex is not None
+                        else ex_q.start_shift_from_prev(q)),
                        ex_u.start_shift_from_prev(u))
 
         # ---- metrics ------------------------------------------------------------
         res_sq = jax.lax.psum(jnp.sum(r * r), ("model",) + dp)
+        # per-stage primal residual (the controller's per-boundary signal):
+        # each stage drops its local ||p_next - q||^2 into its slot, psum
+        # assembles the replicated [n_stages] vector
+        seg = jnp.zeros((n_stages,), jnp.float32).at[sidx].set(
+            jnp.sum(r * r))
+        seg = jax.lax.psum(seg, ("model",) + dp)
         risk_val = _masked_ce_val(z[-1], labels, label_mask, n_classes)
         risk_val = jnp.where(sidx == n_stages - 1, risk_val, 0.0)
         risk_val = jax.lax.psum(risk_val, "model")
@@ -299,7 +342,8 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
                                 is_first, is_last, nu, rho)
         lag = jax.lax.psum(lag, ("model",) + dp) + risk_val
         new = StackState(p, W, b, z, q, u)
-        metrics = {"residual": jnp.sqrt(res_sq), "objective": lag}
+        metrics = {"residual": jnp.sqrt(res_sq), "objective": lag,
+                   "stage_residuals": jnp.sqrt(seg)}
         return ((new, out_fly) if overlap else new), metrics
 
     def _local_lagrangian(st, rr, q_prev, u_prev, is_first, is_last, nu, rho):
@@ -313,31 +357,56 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         return val
 
     if overlap:
-        carry_specs = (stack_specs, (_payload_spec(q_codec, dp),
-                                     _payload_spec(FP32, dp)))
+        carry_specs = (stack_specs,
+                       (_payload_spec(wire if wire is not None else q_codec,
+                                      dp),
+                        _payload_spec(FP32, dp)))
     else:
         carry_specs = stack_specs
-    smapped = shard_map(
-        stage_body, mesh=mesh,
-        in_specs=(carry_specs, P(dp), P(dp), P(dp)),
-        out_specs=(carry_specs, P()),
-        check_rep=False)
+    if wire is not None:
+        smapped = shard_map(
+            stage_body, mesh=mesh,
+            in_specs=(carry_specs, P(dp), P(dp), P(dp), P()),
+            out_specs=(carry_specs, P()),
+            check_rep=False)
+    else:
+        smapped = shard_map(
+            lambda c, Xp, lab, msk: stage_body(c, Xp, lab, msk), mesh=mesh,
+            in_specs=(carry_specs, P(dp), P(dp), P(dp)),
+            out_specs=(carry_specs, P()),
+            check_rep=False)
 
     return jax.jit(smapped, donate_argnums=(0,) if donate else ()), stack_specs
 
 
-def make_overlap_primer(mesh: Mesh, q_codec: WireCodec = FP32):
+def make_overlap_primer(mesh: Mesh, q_codec: WireCodec = FP32, *,
+                        wire: Optional[PaddedWire] = None):
     """Start the FIRST iteration's forward q/u boundary exchange for an
     ``overlap=True`` step: ``prime(q, u) -> (q_payload, u_payload)`` — the
     in-flight carry half. `q_codec` must match the step's q wire (u always
-    flies fp32, as in `make_distributed_step`)."""
+    flies fp32, as in `make_distributed_step`). With `wire` (the padded-
+    container step) the primer is ``prime(q, u, widths)`` — the q slab is
+    encoded into the container at the widths table's traced q sels, so one
+    compiled primer serves every schedule."""
     dp = _dp_axes(mesh)
     ex_q = NeighborExchange("model", q_codec)
     ex_u = NeighborExchange("model", FP32)
+    cex = None if wire is None else ContainerExchange("model", wire)
 
     def prime(q, u):
         return (ex_q.start_shift_from_prev(q), ex_u.start_shift_from_prev(u))
 
+    def prime_container(q, u, widths):
+        sel_q = widths[0, jax.lax.axis_index("model")]
+        return (cex.start_shift_from_prev(q, sel_q),
+                ex_u.start_shift_from_prev(u))
+
+    if wire is not None:
+        return jax.jit(shard_map(
+            prime_container, mesh=mesh,
+            in_specs=(P("model", dp), P("model", dp), P()),
+            out_specs=(_payload_spec(wire, dp), _payload_spec(FP32, dp)),
+            check_rep=False))
     return jax.jit(shard_map(
         prime, mesh=mesh,
         in_specs=(P("model", dp), P("model", dp)),
@@ -382,6 +451,69 @@ def wire_bytes_per_iteration(mesh, L: int, V: int, h: int,
     }
 
 
+def container_wire_bytes_per_iteration(mesh, L: int, V: int, h: int,
+                                       wire: PaddedWire, q_bits, p_bits
+                                       ) -> dict:
+    """Exact global bytes one padded-container iteration puts on the stage
+    ring, split physical-vs-logical: every stage sends its q/p boundary slab
+    as a fixed-capacity container (`wire` bytes — what the link carries),
+    with the active codec's packed size as the logical payload (`q_fwd` /
+    `p_bwd`, per stage). u still flies fp32. Ragged V accounted per data
+    shard, exactly like :func:`wire_bytes_per_iteration`."""
+    n_stages = mesh.shape["model"]
+    assert len(q_bits) == len(p_bits) == n_stages
+    dp_total = 1
+    for a in ("pod", "data"):
+        dp_total *= mesh.shape.get(a, 1)
+    rows = shard_rows(V, dp_total)
+    cap = sum(wire.capacity((1, r, h)) for r in rows)
+    return {
+        "q_fwd": [sum(wire.payload_bytes((1, r, h), b) for r in rows)
+                  for b in q_bits],
+        "p_bwd": [sum(wire.payload_bytes((1, r, h), b) for r in rows)
+                  for b in p_bits],
+        "u_fwd": n_stages * sum(FP32.payload_bytes((1, r, h)) for r in rows),
+        "container_bytes": cap,              # physical, per stage, q or p
+        "elements_per_edge": n_stages * V * h,
+        "shard_rows": rows,
+        "links": n_stages * dp_total,
+    }
+
+
+def _record_container_iteration(ledger, iteration: int, mesh, L, V, h,
+                                wire: PaddedWire, q_bits, p_bits) -> None:
+    """One padded-container iteration on the ledger: per stage, the q/p
+    containers at their ACTIVE bit-width (logical payload) and fixed
+    capacity (physical wire bytes); u as one fp32 record."""
+    wb = container_wire_bytes_per_iteration(mesh, L, V, h, wire, q_bits,
+                                            p_bits)
+    n_el = V * h
+    for i in range(mesh.shape["model"]):
+        ledger.record(iteration, f"q_fwd/s{i}", "ppermute", n_el,
+                      int(q_bits[i]), wb["q_fwd"][i],
+                      wire_bytes=wb["container_bytes"])
+        ledger.record(iteration, f"p_bwd/s{i}", "ppermute", n_el,
+                      int(p_bits[i]), wb["p_bwd"][i],
+                      wire_bytes=wb["container_bytes"])
+    ledger.record(iteration, "u_fwd", "ppermute", wb["elements_per_edge"],
+                  32, wb["u_fwd"])
+
+
+def _record_container_qu_pair(ledger, iteration: int, mesh, L, V, h,
+                              wire: PaddedWire, q_bits, suffix: str) -> None:
+    """Charge one unconsumed q+u in-flight pair of the container path
+    (``/inflight`` tail or ``/dropped`` on a q-schedule change)."""
+    wb = container_wire_bytes_per_iteration(mesh, L, V, h, wire, q_bits,
+                                            q_bits)
+    n_stages = mesh.shape["model"]
+    ledger.record(iteration, "q_fwd/" + suffix, "ppermute",
+                  wb["elements_per_edge"], int(max(q_bits)),
+                  sum(wb["q_fwd"]),
+                  wire_bytes=n_stages * wb["container_bytes"])
+    ledger.record(iteration, "u_fwd/" + suffix, "ppermute",
+                  wb["elements_per_edge"], 32, wb["u_fwd"])
+
+
 def _record_ring_span(ledger, start: int, n: int, mesh, L, V, h,
                       p_codec: WireCodec, q_codec: WireCodec) -> None:
     """Record `n` iterations of ring traffic (q/u forward, p backward) in
@@ -414,7 +546,8 @@ def _record_qu_pair(ledger, iteration: int, mesh, L, V, h,
 def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
                       config: ADMMConfig, epochs: int, *, ledger=None,
                       controller=None, grids_by_bits=None,
-                      overlap: bool = False, chunk: int = 32):
+                      overlap: bool = False, chunk: int = 32,
+                      mixed_width: bool = False):
     """End-to-end stage-parallel training loop (small meshes / tests).
 
     The no-controller path rides a chunked ``lax.scan`` driver
@@ -432,6 +565,18 @@ def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
     LAZILY, so only schedules that actually run compile (observable as
     ``hist["n_compiled_steps"]``). A schedule change under overlap re-primes
     the carry with the new wire format.
+
+    ``mixed_width=True`` (requires `controller` + `grids_by_bits`) rides the
+    padded-container wire instead: ONE step compiles
+    (``hist["n_compiled_steps"] == 1``) and the controller assigns each ring
+    boundary its own bit-width every iteration from the per-stage primal
+    residuals (``metrics["stage_residuals"]``), passed into the compiled
+    step as a traced widths table — schedule changes never recompile. The
+    controller manages ``n_stages`` edges (one width per boundary, q and p
+    shared) or ``2 * n_stages`` (q edges then p edges). The ledger records
+    each stage's container at its active width: logical `payload_bytes` =
+    the packed active codec, physical `wire_bytes` = the fixed container
+    capacity.
 
     Overlap ledger accounting: the N consumed per-iteration exchanges are
     recorded identically to ``overlap=False`` (overlap changes when bytes
@@ -480,7 +625,53 @@ def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
     msk = put(masks["train"], P(dp))
     hist = {"objective": [], "residual": [], "schedules": []}
 
-    if controller is None:
+    if mixed_width:
+        assert controller is not None and grids_by_bits is not None, \
+            "mixed_width needs a controller and grids_by_bits"
+        wire = PaddedWire.from_grids(grids_by_bits)
+        n_stages = mesh.shape["model"]
+        n_edges = len(controller.edge_elements)
+        assert n_edges in (n_stages, 2 * n_stages), (n_edges, n_stages)
+        step_cache["container"] = make_distributed_step(
+            mesh, L, n_classes, config, overlap=overlap, wire=wire)[0]
+        step = step_cache["container"]
+        primer = (make_overlap_primer(mesh, wire=wire) if overlap else None)
+        stage_res = [0.0] * n_stages
+        inflight, prev_q_bits = None, None
+        for e in range(epochs):
+            sig = stage_res if n_edges == n_stages else stage_res + stage_res
+            sched = controller.assign(sig, e)
+            q_bits = sched[:n_stages]
+            p_bits = sched[:n_stages] if n_edges == n_stages \
+                else sched[n_stages:]
+            hist["schedules"].append(sched)
+            widths = jnp.stack([wire.sel_of_bits(q_bits),
+                                wire.sel_of_bits(p_bits)])
+            if overlap:
+                if inflight is None or q_bits != prev_q_bits:
+                    if inflight is not None and ledger is not None:
+                        # the superseded in-flight pair (old q widths)
+                        # already crossed the link — account for it
+                        _record_container_qu_pair(ledger, e, mesh, L, V, h,
+                                                  wire, prev_q_bits,
+                                                  "dropped")
+                    inflight = primer(state.q, state.u, widths)
+                    prev_q_bits = q_bits
+                (state, inflight), m = step((state, inflight), Xp_s, lab,
+                                            msk, widths)
+            else:
+                state, m = step(state, Xp_s, lab, msk, widths)
+            stage_res = [float(v) for v in m["stage_residuals"]]
+            hist["objective"].append(float(m["objective"]))
+            hist["residual"].append(float(m["residual"]))
+            if ledger is not None:
+                _record_container_iteration(ledger, e, mesh, L, V, h, wire,
+                                            q_bits, p_bits)
+        if overlap and ledger is not None and epochs > 0:
+            # the tail pair still in flight in the carry at termination
+            _record_container_qu_pair(ledger, epochs, mesh, L, V, h, wire,
+                                      prev_q_bits, "inflight")
+    elif controller is None:
         p_codec, q_codec = codecs_for(None)
         step = step_for(None)
         carry = (state, prime(None, state)) if overlap else state

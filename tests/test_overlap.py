@@ -179,7 +179,7 @@ from repro.comm.codecs import GridCodec
 sig = inspect.signature(SP.make_distributed_step)
 kw = {n for n, p in sig.parameters.items()
       if p.kind == inspect.Parameter.KEYWORD_ONLY}
-assert kw == {"overlap", "donate", "p_codec", "q_codec"}, (
+assert kw == {"overlap", "donate", "p_codec", "q_codec", "wire"}, (
     "new kwarg(s) %r: add an observability assertion for each" % kw)
 
 V, h, L, C = 64, 32, 4, 4
@@ -211,6 +211,18 @@ qc, _ = SP.make_distributed_step(
 dts = sorted(p["dtype"] for p in collective_profile(
     jax.make_jaxpr(qc)(state, *args).jaxpr))
 assert dts == ["float32", "uint16", "uint8"], dts
+
+# wire: the p/q ppermutes become fixed-size uint8 containers (u stays
+# fp32), the step takes the traced widths table, and widths VALUES are not
+# part of the specialization — two different schedules, one compilation
+from repro.comm.transport import PaddedWire
+wire = PaddedWire.from_grids(
+    {b: quantize.uniform_grid(b, -2.0, 6.0) for b in (4, 8, 16)})
+cw, _ = SP.make_distributed_step(mesh, L, C, cfg, wire=wire)
+widths = jnp.zeros((2, 2), jnp.int32)
+dts = sorted(p["dtype"] for p in collective_profile(
+    jax.make_jaxpr(cw)(state, *args, widths).jaxpr))
+assert dts == ["float32", "uint8", "uint8"], dts
 print("KWARGS_OK")
 """)
     assert "KWARGS_OK" in out
