@@ -26,9 +26,16 @@ the per-boundary controller: n_compiled_steps (exactly 1 across every
 schedule) and active-codec bytes saved vs pinning every boundary to the
 widest width.
 
-Each row runs in a subprocess with 8 forced CPU devices so the device-count
-flag never leaks into this process; `--smoke` runs all three at small
-shapes and writes BENCH_comm.json (the CI bench-smoke artifact).
+The `costmodel` row closes the loop on wall time: the trace-driven replay
+model (repro.analysis.replay) is calibrated from micro-runs, predicts the
+overlap on/off step pair (relative error + ordering recorded), and prices
+the walltime-objective controller's schedules against the bytes floor on
+the mixed-width bench. The `control_interval` row sweeps the adaptive
+loop's schedule-lag vs host-sync tradeoff at interval ∈ {1, 4, 16}.
+
+Distributed rows run in a subprocess with 8 forced CPU devices so the
+device-count flag never leaks into this process; `--smoke` runs every row
+at small shapes and writes BENCH_comm.json (the CI bench-smoke artifact).
 """
 from __future__ import annotations
 
@@ -116,7 +123,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, "src"); sys.path.insert(0, "tests")
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from conftest import collective_profile
+from repro.analysis.jaxpr_tools import collective_profile
 from repro.launch.mesh import compat_make_mesh
 from repro.core.pdadmm import ADMMConfig
 from repro.core import quantize
@@ -348,6 +355,191 @@ def bench_mixed_width(smoke: bool = False):
     return data
 
 
+_COSTMODEL_SNIPPET = """
+import os, json, time
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# the replay model is calibrated and validated in the interpret-kernel
+# regime: its per-op overhead dominates the CPU-sim step, which makes the
+# measured pair stable run-to-run (the ref-mode pair is noise-level on a
+# time-sliced single core)
+os.environ["REPRO_KERNELS"] = "interpret"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import compat_make_mesh
+from repro.core.pdadmm import ADMMConfig
+from repro.core import quantize
+from repro.comm import BitWidthController, CommLedger, ControllerConfig
+from repro.comm.codecs import codec_for_grid
+from repro.comm.controller import stage_ring_edges
+from repro.graph.datasets import tiny
+from repro.parallel import stage_parallel as SP
+from repro.analysis.replay import calibrate, replay
+
+V, h, L, C, iters, epochs = %(V)d, %(h)d, %(L)d, 4, %(iters)d, %(epochs)d
+mesh = compat_make_mesh((2, 4), ("data", "model"))
+n_stages = 4
+cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, quantize_q=True,
+                 grid=quantize.uniform_grid(8, -2.0, 6.0))
+key = jax.random.PRNGKey(0)
+Xp = jax.random.normal(key, (V, h))
+state0 = SP.init_stack(key, Xp, L, cfg)
+specs = SP.stack_partition_specs(mesh)
+put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
+state0 = jax.tree.map(put, state0, specs)
+args = (put(Xp, P("data")), put(jnp.zeros((V,), jnp.int32), P("data")),
+        put(jnp.ones((V,)), P("data")))
+
+costs = calibrate(mesh, V=V, h=h)
+out = {"V": V, "h": h, "L": L, "iters": iters,
+       "kernels": os.environ["REPRO_KERNELS"]}
+
+# predicted vs measured, overlap off/on -------------------------------------
+for overlap in (False, True):
+    step, _ = SP.make_distributed_step(mesh, L, C, cfg, overlap=overlap)
+    carry = state0
+    if overlap:
+        primer = SP.make_overlap_primer(mesh, codec_for_grid(cfg.grid))
+        carry = (state0, primer(state0.q, state0.u))
+    carry, _m = step(carry, *args)            # compile + warmup
+    jax.block_until_ready(carry)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        carry, _m = step(carry, *args)
+    jax.block_until_ready(carry)
+    ms = (time.perf_counter() - t0) / iters * 1e3
+    dag = SP.trace_step_dag(mesh, L, C, cfg, V=V, h=h, overlap=overlap)
+    pred = replay(dag, costs).step_time_ms
+    k = "overlap" if overlap else "baseline"
+    out[k + "_measured_ms"] = round(ms, 3)
+    out[k + "_predicted_ms"] = round(pred, 3)
+    out[k + "_rel_err"] = round(abs(pred - ms) / ms, 4)
+out["predicted_ordering_ok"] = bool(
+    out["overlap_predicted_ms"] <= out["baseline_predicted_ms"])
+
+# walltime- vs bytes-objective controller on the mixed-width bench ----------
+ds = tiny(V=V)
+X = ds.augmented(4)
+P0 = jax.random.normal(key, (X.shape[1], h)) * jnp.sqrt(2.0 / X.shape[1])
+Xp2 = jnp.maximum(X @ P0, 0)
+grids = {b: quantize.uniform_grid(b, -2.0, 6.0) for b in (4, 8, 16)}
+cm = SP.step_cost_model(mesh, L, C, cfg, costs, V=V, h=h,
+                        grids_by_bits=grids, mixed_width=True)
+ctl_kw = dict(allowed_bits=(4, 8, 16), min_bits=4, max_bits=16,
+              min_dwell=1, hysteresis=0.0, signal="per_edge",
+              thresholds=((0.5, 4), (0.1, 8)))
+trained = {}
+for name, cc, cmod in (
+        ("bytes", ControllerConfig(**ctl_kw), None),
+        ("walltime", ControllerConfig(objective="walltime", **ctl_kw), cm)):
+    ctl = BitWidthController(stage_ring_edges(n_stages, V, h), cc,
+                             cost_model=cmod)
+    led = CommLedger()
+    _, hist = SP.distributed_train(
+        mesh, key, Xp2, ds.labels, ds.masks, L, ds.n_classes,
+        ADMMConfig(nu=1e-2, rho=1.0), epochs=epochs, controller=ctl,
+        grids_by_bits=grids, ledger=led, mixed_width=True)
+    assert hist["n_compiled_steps"] == 1, hist["n_compiled_steps"]
+    trained[name] = hist
+    out[name + "_final_schedule"] = list(hist["schedules"][-1])
+    out[name + "_n_distinct_schedules"] = len(set(hist["schedules"]))
+    out[name + "_n_compiled_steps"] = hist["n_compiled_steps"]
+    out[name + "_predicted_step_ms"] = round(
+        cm(hist["schedules"][-1]) * 1e3, 3)
+# the walltime objective may never emit a schedule predicted slower than
+# the bytes floor of the SAME iteration
+assert all(cm(w) <= cm(b) * (1 + 1e-9) for b, w in
+           zip(trained["bytes"]["schedules"],
+               trained["walltime"]["schedules"]))
+out["walltime_never_slower"] = True
+print(json.dumps(out))
+"""
+
+
+def bench_costmodel(smoke: bool = False):
+    """The replay cost model against reality, at 8 simulated CPU devices:
+    calibrate from micro-runs (never from the step under test), predict the
+    overlap on/off step pair, and report relative error + predicted
+    ordering. Then run the mixed-width bench under a bytes-objective and a
+    walltime-objective controller sharing one ScheduleCostModel: the
+    walltime schedules must never be predicted slower than the bytes floor,
+    with no compile blowup (the container path's single compiled step)."""
+    V, h, L, iters, epochs = ((128, 32, 8, 10, 6) if smoke
+                              else (128, 32, 8, 30, 12))
+    code = _COSTMODEL_SNIPPET % {"V": V, "h": h, "L": L, "iters": iters,
+                                 "epochs": epochs}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    data = json.loads(r.stdout.strip().splitlines()[-1])
+    assert data["predicted_ordering_ok"], data
+    header = ["case", "measured_ms", "predicted_ms", "rel_err"]
+    rows = [
+        ["exchange_fused", data["baseline_measured_ms"],
+         data["baseline_predicted_ms"], data["baseline_rel_err"]],
+        ["exchange_overlap", data["overlap_measured_ms"],
+         data["overlap_predicted_ms"], data["overlap_rel_err"]],
+    ]
+    write_csv("comm_costmodel", header, rows)
+    print_rows("comm_costmodel (replay prediction vs measured, interpret "
+               "kernels)", header, rows)
+    print(f"  walltime controller: final schedule "
+          f"{data['walltime_final_schedule']} predicted "
+          f"{data['walltime_predicted_step_ms']} ms vs bytes "
+          f"{data['bytes_final_schedule']} predicted "
+          f"{data['bytes_predicted_step_ms']} ms")
+    return data
+
+
+def bench_control_interval(smoke: bool = False):
+    """ROADMAP follow-up: the `control_interval` schedule-lag vs host-sync
+    tradeoff. One adaptive run per interval in {1, 4, 16} (fresh controller
+    and ledger each) — an interval-k run makes epochs/k host syncs and the
+    controller reacts to residuals up to k-1 iterations stale; bytes and
+    accuracy quantify what that staleness costs."""
+    from repro.graph.datasets import tiny
+    V, hidden, layers, epochs = ((64, 32, 4, 16) if smoke
+                                 else (256, 64, 6, 32))
+    ds = tiny(V=V)
+    X = ds.augmented(4)
+    dims = [X.shape[1]] + [hidden] * (layers - 1) + [ds.n_classes]
+    key = jax.random.PRNGKey(0)
+    grids = {b: pdadmm.calibrate_grid(key, X, dims, b)
+             for b in ADAPTIVE_BITS}
+    cfg = ADMMConfig(nu=1e-2, rho=1.0)
+    out = {"V": V, "epochs": epochs, "intervals": {}}
+    rows = []
+    for interval in (1, 4, 16):
+        # reactive config (single threshold, no dwell/hysteresis damping):
+        # the schedule graduates 8 -> 16 the moment the summed residual
+        # falls below half its peak, so interval lag is actually visible
+        # in the bytes column instead of damped away
+        controller = BitWidthController(
+            admm_edges(dims, V),
+            ControllerConfig(allowed_bits=ADAPTIVE_BITS, min_bits=8,
+                             max_bits=16, thresholds=((0.5, 8),),
+                             min_dwell=1, hysteresis=0.0))
+        ledger = CommLedger()
+        _, hist = train_adaptive(key, X, ds.labels, ds.masks, dims, cfg,
+                                 epochs, controller=controller,
+                                 ledger=ledger, grids_by_bits=grids,
+                                 control_interval=interval)
+        row = {"host_syncs": -(-epochs // interval),
+               "total_bytes": int(ledger.total_bytes()),
+               "n_switches": controller.n_switches,
+               "test_acc": round(hist["test_acc"][-1], 4)}
+        out["intervals"][str(interval)] = row
+        rows.append([interval, row["host_syncs"], row["total_bytes"],
+                     row["n_switches"], row["test_acc"]])
+    header = ["control_interval", "host_syncs", "total_bytes", "n_switches",
+              "test_acc"]
+    write_csv("comm_control_interval", header, rows)
+    print_rows("comm_control_interval (schedule lag vs host syncs)", header,
+               rows)
+    return out
+
+
 def write_bench_json(**rows):
     (ROOT / "BENCH_comm.json").write_text(
         json.dumps(rows, indent=2) + "\n")
@@ -356,7 +548,9 @@ def write_bench_json(**rows):
 def run_smoke():
     write_bench_json(overlap=bench_overlap(smoke=True),
                      allreduce=bench_allreduce(smoke=True),
-                     mixed_width=bench_mixed_width(smoke=True))
+                     mixed_width=bench_mixed_width(smoke=True),
+                     costmodel=bench_costmodel(smoke=True),
+                     control_interval=bench_control_interval(smoke=True))
 
 
 def run(epochs: int = 30, hidden: int = 100, layers: int = 10):
@@ -385,15 +579,18 @@ def run(epochs: int = 30, hidden: int = 100, layers: int = 10):
     print_rows("fig5_comm_overheads (paper Fig 5 + adaptive)", header, rows)
     write_bench_json(overlap=bench_overlap(),
                      allreduce=bench_allreduce(),
-                     mixed_width=bench_mixed_width())
+                     mixed_width=bench_mixed_width(),
+                     costmodel=bench_costmodel(),
+                     control_interval=bench_control_interval())
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="overlap/allreduce/mixed_width rows only, small "
-                         "shapes (CI artifact)")
+                    help="overlap/allreduce/mixed_width/costmodel/"
+                         "control_interval rows only, small shapes "
+                         "(CI artifact)")
     if ap.parse_args().smoke:
         run_smoke()
     else:

@@ -1,0 +1,136 @@
+"""Measured per-op wall-time costs + the parametric link model — the cost
+half of the trace-driven replay subsystem (:mod:`repro.analysis.replay`).
+
+A :class:`CostTable` is a flat ``{key: seconds-or-rate}`` mapping, measured
+by timed micro-runs (warmup + ``jax.block_until_ready`` discipline, median
+over repeats so one scheduler hiccup never poisons an entry) and
+persistable to JSON so a calibration can be reused across runs on the same
+backend. The replay DAG attaches costs through these key conventions:
+
+  * ``rate:dot_flops``        — dense-contraction throughput (flop/s);
+    a ``dot_general`` eqn costs ``flops / rate + rate:op_overhead``.
+  * ``rate:eltwise_bytes``    — streaming elementwise throughput (byte/s);
+    any other eqn costs ``out_bytes / rate + rate:op_overhead``.
+  * ``rate:op_overhead``      — fixed per-eqn dispatch/launch cost (s).
+  * ``collective:<prim>``     — critical-path toll of one BLOCKING
+    collective (``ppermute``/``psum``/``all_gather``) on this backend: what
+    a rendezvous costs when every device must stop at it. On the CPU device
+    simulator this is thread-wake/ctx-switch dominated; on ICI it is the
+    launch+latency floor. Measured as (one-collective step) − (empty step).
+  * ``collective:<prim>:issue`` — cost of ISSUING the same collective
+    asynchronously (a carried / double-buffered start whose consumer is an
+    iteration away): the part that stays on the critical path when the
+    transfer itself is hidden.
+  * ``step:dispatch``         — fixed per-step host dispatch overhead (s).
+  * ``link:latency`` / ``link:bandwidth`` — the :class:`LinkModel`
+    parameters (s, byte/s): one message of ``wire_bytes`` occupies the link
+    for ``latency + wire_bytes / bandwidth``.
+
+Anything missing falls back to :data:`DEFAULT_ENTRIES` (rough CPU-backend
+numbers) so a replay without calibration still produces a finite, ordered
+prediction — calibrate with real micro-runs before trusting magnitudes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """``time = latency + wire_bytes / bandwidth`` for one message on one
+    link — fed by the same ``wire_bytes`` the :class:`CommLedger` charges
+    (`WireRecord.wire_bytes`, `psum_wire_bytes`), so the replay and the
+    ledger price exactly the same physical payloads."""
+    latency_s: float = 50e-6
+    bandwidth_Bps: float = 4e9
+
+    def transfer_time(self, wire_bytes: float) -> float:
+        return self.latency_s + float(wire_bytes) / self.bandwidth_Bps
+
+
+DEFAULT_ENTRIES: Dict[str, float] = {
+    "rate:dot_flops": 5e9,
+    "rate:eltwise_bytes": 2e9,
+    "rate:op_overhead": 2e-7,
+    "collective:ppermute": 500e-6,
+    "collective:psum": 500e-6,
+    "collective:all_gather": 500e-6,
+    "collective:ppermute:issue": 20e-6,
+    "collective:psum:issue": 20e-6,
+    "collective:all_gather:issue": 20e-6,
+    "step:dispatch": 200e-6,
+    "link:latency": 50e-6,
+    "link:bandwidth": 4e9,
+}
+
+
+def timed(fn: Callable, *args, iters: int = 10, warmup: int = 2,
+          reps: int = 3) -> float:
+    """Mean seconds per call of ``fn(*args)`` under the bench discipline:
+    `warmup` untimed calls (compile + cache), then `reps` timed batches of
+    `iters` calls each ending in ``jax.block_until_ready``; the MEDIAN batch
+    is reported so a one-off scheduler stall cannot poison the entry."""
+    for _ in range(max(1, warmup)):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    samples = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) / iters)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+class CostTable:
+    """Measured per-op costs, JSON-persistable. Missing keys fall back to
+    :data:`DEFAULT_ENTRIES` (and 0.0 for unknown keys, loudly available via
+    :meth:`get` default)."""
+
+    def __init__(self, entries: Optional[Dict[str, float]] = None,
+                 meta: Optional[Dict] = None):
+        self.entries: Dict[str, float] = dict(entries or {})
+        self.meta: Dict = dict(meta or {})
+
+    def get(self, key: str, default: Optional[float] = None) -> float:
+        if key in self.entries:
+            return float(self.entries[key])
+        if key in DEFAULT_ENTRIES:
+            return float(DEFAULT_ENTRIES[key])
+        if default is None:
+            raise KeyError(f"no cost entry {key!r} and no default")
+        return float(default)
+
+    def set(self, key: str, seconds: float) -> None:
+        self.entries[key] = float(seconds)
+
+    def measure(self, key: str, fn: Callable, *args, iters: int = 10,
+                warmup: int = 2, reps: int = 3) -> float:
+        """Time ``fn(*args)`` (see :func:`timed`) and store it under `key`;
+        returns the measured seconds-per-call."""
+        t = timed(fn, *args, iters=iters, warmup=warmup, reps=reps)
+        self.set(key, t)
+        return t
+
+    @property
+    def link(self) -> LinkModel:
+        return LinkModel(self.get("link:latency"), self.get("link:bandwidth"))
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path) -> None:
+        Path(path).write_text(json.dumps(
+            {"entries": self.entries, "meta": self.meta}, indent=2,
+            sort_keys=True) + "\n")
+
+    @classmethod
+    def load(cls, path) -> "CostTable":
+        data = json.loads(Path(path).read_text())
+        return cls(data.get("entries", {}), data.get("meta", {}))

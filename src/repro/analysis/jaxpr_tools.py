@@ -1,0 +1,93 @@
+"""Recursive jaxpr introspection: the trace-level ground truth every
+schedule claim in this repo is checked against.
+
+Promoted from ``tests/conftest.py`` (where the overlap/fastpath batteries
+grew them) into the library because the replay cost model
+(:mod:`repro.analysis.replay`) walks the SAME jitted step jaxprs to extract
+its task DAG — the walkers are runtime infrastructure now, not test-only
+code. ``tests/conftest.py`` re-exports them unchanged.
+
+  * :func:`count_primitive` / :func:`count_primitives` — occurrences of a
+    primitive, recursing into nested (Closed)Jaxprs carried in eqn params
+    (pjit bodies, loop bodies, shard_map bodies, ...),
+  * :func:`jaxprs_with` — every (sub)jaxpr that holds a primitive DIRECTLY
+    (the body a collective is scheduled in, not its enclosing wrappers),
+  * :func:`collective_profile` — per-collective schedule profile: wire
+    dtype, whether the result is carried out of its body (a double-buffered
+    in-flight slab consumed only by the NEXT iteration), and how much
+    solver-shaped work is scheduled between issue and first consumer.
+"""
+from __future__ import annotations
+
+
+def _sub_jaxprs(eqn):
+    """Nested (Closed)Jaxprs carried in an eqn's params (pjit bodies, loop
+    bodies, shard_map bodies, ...), normalized to raw Jaxprs."""
+    for v in eqn.params.values():
+        for x in (v if isinstance(v, (list, tuple)) else [v]):
+            if hasattr(x, "jaxpr"):              # ClosedJaxpr
+                yield x.jaxpr
+            elif hasattr(x, "eqns"):             # raw Jaxpr
+                yield x
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive `name` in `jaxpr`, recursing into nested
+    (Closed)Jaxprs carried in eqn params (pjit bodies, loop bodies, ...)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for sub in _sub_jaxprs(eqn):
+            n += count_primitive(sub, name)
+    return n
+
+
+def count_primitives(jaxpr, names) -> int:
+    """`count_primitive` over a set of primitive names."""
+    return sum(count_primitive(jaxpr, n) for n in names)
+
+
+def jaxprs_with(jaxpr, name: str):
+    """Yield every (sub)jaxpr that holds a `name` eqn DIRECTLY (the body a
+    collective is scheduled in, not its enclosing pjit wrappers)."""
+    if any(e.primitive.name == name for e in jaxpr.eqns):
+        yield jaxpr
+    for eqn in jaxpr.eqns:
+        for sub in _sub_jaxprs(eqn):
+            yield from jaxprs_with(sub, name)
+
+
+def collective_profile(jaxpr, name: str = "ppermute",
+                       work=("dot_general", "pallas_call")):
+    """Schedule profile of every `name` collective: for each one, in program
+    order, a dict with
+
+      * ``dtype``   — wire dtype of the moved payload,
+      * ``carried`` — True iff NO later eqn in its body reads the result
+        (it leaves through the body's outputs — e.g. a double-buffered
+        in-flight slab consumed only by the NEXT iteration),
+      * ``work_to_consumer`` — solver-shaped primitives (`work`, counted
+        recursively) scheduled between the collective and the first eqn
+        that reads its result: >0 means the message latency hides behind
+        real compute, 0 means it sits on the critical path.
+    """
+    out = []
+    for body in jaxprs_with(jaxpr, name):
+        for i, eqn in enumerate(body.eqns):
+            if eqn.primitive.name != name:
+                continue
+            v = eqn.outvars[0]
+            consumers = [j for j in range(i + 1, len(body.eqns))
+                         if any(iv is v for iv in body.eqns[j].invars)]
+            between = 0
+            for j in range(i + 1, consumers[0]) if consumers else ():
+                eq = body.eqns[j]
+                if eq.primitive.name in work:
+                    between += 1
+                for sub in _sub_jaxprs(eq):
+                    between += count_primitives(sub, work)
+            out.append({"dtype": str(v.aval.dtype),
+                        "carried": not consumers,
+                        "work_to_consumer": between})
+    return out

@@ -49,6 +49,17 @@ class ControllerConfig:
     # "at peak" and stays pinned at min_bits, which persists its projection
     # error for the whole run. Global is the accuracy-safe default.
     signal: str = "global"
+    # "bytes" (default): emit the residual-driven accuracy floor directly —
+    # the coarsest schedule the thresholds allow. "walltime": treat that
+    # floor as the ACCURACY constraint and spend any bandwidth that is free
+    # in *time*: each edge is promoted to the finest legal width whose
+    # predicted step time (via the replay cost model passed to the
+    # controller) stays within `walltime_slack` of the floor schedule's —
+    # on a padded-container wire the physical payload is schedule-
+    # independent, so precision is literally free; on a codec wire bigger
+    # payloads cost time and the floor survives. Requires `cost_model`.
+    objective: str = "bytes"
+    walltime_slack: float = 0.0    # relative predicted-time headroom
 
     def clamp(self, bits: int) -> int:
         bits = min(max(bits, self.min_bits), self.max_bits)
@@ -71,7 +82,8 @@ class BitWidthController:
     """
 
     def __init__(self, edge_elements: Sequence[int],
-                 config: ControllerConfig = ControllerConfig()):
+                 config: ControllerConfig = ControllerConfig(), *,
+                 cost_model=None):
         if config.byte_budget is not None and not config.total_iters:
             raise ValueError("byte_budget requires total_iters")
         if not [b for b in config.allowed_bits
@@ -79,13 +91,22 @@ class BitWidthController:
             raise ValueError(
                 f"no allowed_bits {config.allowed_bits} inside "
                 f"[min_bits={config.min_bits}, max_bits={config.max_bits}]")
+        if config.objective not in ("bytes", "walltime"):
+            raise ValueError(f"unknown objective {config.objective!r}")
+        if config.objective == "walltime" and cost_model is None:
+            raise ValueError(
+                "objective='walltime' needs a cost_model: a callable "
+                "schedule -> predicted step seconds (see "
+                "repro.analysis.replay.ScheduleCostModel)")
         self.config = config
+        self.cost_model = cost_model
         self.edge_elements = [int(e) for e in edge_elements]
         n = len(self.edge_elements)
         self._bits: List[int] = [config.clamp(config.min_bits)] * n
         self._peak: List[float] = [0.0] * n
         self._global_peak: float = 0.0
         self._last_switch: List[int] = [-config.min_dwell] * n
+        self._emitted: Tuple[int, ...] = tuple(self._bits)
         self.spent_bytes: float = 0.0
         self.n_switches: int = 0
 
@@ -159,8 +180,40 @@ class BitWidthController:
             self.n_switches += 1
 
         self._enforce_budget(iteration)
-        self.spent_bytes += self._projected()
-        return tuple(self._bits)
+        self._emitted = (self._walltime_promote(iteration)
+                         if cfg.objective == "walltime"
+                         else tuple(self._bits))
+        self.spent_bytes += sum(self._edge_bytes(i, b)
+                                for i, b in enumerate(self._emitted))
+        return self._emitted
+
+    def _walltime_promote(self, iteration: int) -> Tuple[int, ...]:
+        """Promote each edge of the accuracy floor to the finest legal width
+        whose predicted step time stays within ``walltime_slack`` of the
+        floor schedule's, budget permitting. The floor (`self._bits`) keeps
+        evolving under the residual policy with dwell/hysteresis untouched;
+        the emitted schedule is a pure function of it, so it inherits the
+        floor's stability (bounded recompiles) and `n_switches` still counts
+        policy switches only. Promotion only ever ADDS precision, so the
+        residual-driven accuracy guarantee of the floor is preserved."""
+        floor = tuple(self._bits)
+        limit = self.cost_model(floor) * (1.0 + self.config.walltime_slack)
+        per_iter = self._per_iter_budget(iteration)
+        legal = self._legal()
+        bits = list(floor)
+        for i in range(len(bits)):
+            for b in reversed(legal):
+                if b <= bits[i]:
+                    break
+                trial = tuple(bits[:i] + [b] + bits[i + 1:])
+                spend = sum(self._edge_bytes(j, t)
+                            for j, t in enumerate(trial))
+                if per_iter is not None and spend > per_iter:
+                    continue
+                if self.cost_model(trial) <= limit * (1.0 + 1e-9):
+                    bits[i] = b
+                    break
+        return tuple(bits)
 
     def _enforce_budget(self, iteration: int) -> None:
         """Safety net for a shrinking budget (promotions are already
@@ -183,7 +236,9 @@ class BitWidthController:
 
     @property
     def schedule(self) -> Tuple[int, ...]:
-        return tuple(self._bits)
+        """The emitted schedule: the residual-driven accuracy floor, wall-
+        time-promoted when ``objective='walltime'``."""
+        return self._emitted
 
 
 # ---------------------------------------------------------------------------

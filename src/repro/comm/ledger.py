@@ -122,6 +122,17 @@ class CommLedger:
             out[r.edge] += r.payload_bytes
         return dict(out)
 
+    def per_edge_iteration_wire(self, iteration: int) -> Dict[str, int]:
+        """Physical wire bytes per edge for ONE iteration — the splice the
+        replay cost model reads (`StepDag.with_wire_bytes`): what each named
+        edge actually put on the links during that iteration, containers and
+        code-psum messages charged at their shipped width."""
+        out: Dict[str, int] = defaultdict(int)
+        for r in self.records:
+            if r.iteration == iteration:
+                out[r.edge] += r.wire_bytes
+        return dict(out)
+
     def baseline_fp32_bytes(self) -> int:
         """What the same traffic would cost uncompressed (handshakes are an
         artifact of compression, so they count 0 in the baseline)."""

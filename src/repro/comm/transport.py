@@ -223,7 +223,13 @@ def psum_mode(codec: WireCodec, world_size: int) -> str:
     ``"psum"`` (plain fp32), ``"gather"`` (packed all-gather + local
     decode-sum) or ``"code_psum"`` (int32 code psum). Ring-model break-even
     — see the module docstring: gather fabric bytes ``w*(w-1)*n*bits/8`` vs
-    code-psum ``8*n*(w-1)``, i.e. gather wins iff ``w * bits < 64``."""
+    code-psum ``8*n*(w-1)``, i.e. gather wins iff ``w * bits < 64``.
+
+    This byte rule is the documented fallback of
+    :func:`repro.analysis.replay.choose_psum_mode`, which prices the same
+    realizations through the measured link model (latency, tolls, local
+    encode/decode passes) when a calibrated cost table is available — in
+    the bandwidth-dominated limit the two agree."""
     if isinstance(codec, Fp32Codec) or codec.bits >= 32:
         return "psum"
     w = int(world_size)

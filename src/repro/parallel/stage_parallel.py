@@ -543,11 +543,126 @@ def _record_qu_pair(ledger, iteration: int, mesh, L, V, h,
                   wb["u_fwd"])
 
 
+# ---------------------------------------------------------------------------
+# Replay cost-model hooks: trace a step variant into the analysis DAG and
+# price schedules / the overlap knob against predicted wall time. These live
+# HERE (not in analysis) because they know how the compiled steps are built;
+# `make_distributed_step`'s signature is pinned by the observability tests,
+# so everything goes through these helpers instead of new step kwargs.
+# ---------------------------------------------------------------------------
+
+def trace_step_dag(mesh, L: int, n_classes: int, config: ADMMConfig, *,
+                   V: int, h: int, overlap: bool = False,
+                   p_codec: Optional[WireCodec] = None,
+                   q_codec: Optional[WireCodec] = None,
+                   wire: Optional[PaddedWire] = None):
+    """Abstractly trace one compiled-step variant into the replay task DAG
+    (:func:`repro.analysis.replay.extract_step_dag`) — nothing compiles and
+    no device arrays are built (`jax.ShapeDtypeStruct` in, jaxpr out).
+
+    The ppermute events are labeled with their CommLedger edge names in the
+    order each variant issues them: the baseline body exchanges q/u at entry
+    and p mid-body, the overlap body only ISSUES p mid-body and q/u at the
+    tail (the entry exchange is a decode of the carry, not a collective)."""
+    from repro.analysis import replay as rp
+    n_stages = mesh.shape["model"]
+    n_rows = 1
+    for a in ("pod", "data"):
+        n_rows *= mesh.shape.get(a, 1)
+    step, _ = make_distributed_step(mesh, L, n_classes, config,
+                                    overlap=overlap, p_codec=p_codec,
+                                    q_codec=q_codec, wire=wire)
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    st = StackState(p=sds((L, V, h), f32), W=sds((L, h, h), f32),
+                    b=sds((L, h), f32), z=sds((L, V, h), f32),
+                    q=sds((L, V, h), f32), u=sds((L, V, h), f32))
+    args = [sds((V, h), f32), sds((V,), i32), sds((V,), f32)]
+    if wire is not None:
+        args.append(sds((2, n_stages), i32))
+    if overlap:
+        qc = q_codec if q_codec is not None else codec_for_grid(
+            config.grid if config.quantize_q else None)
+        primer = make_overlap_primer(mesh, qc, wire=wire)
+        pargs = (st.q, st.u) + ((args[-1],) if wire is not None else ())
+        inflight = jax.eval_shape(primer, *pargs)
+        carry = (st, inflight)
+        names = ["p_bwd", "q_fwd", "u_fwd"]
+    else:
+        carry = st
+        names = ["q_fwd", "u_fwd", "p_bwd"]
+    jx = jax.make_jaxpr(step)(carry, *args)
+    return rp.extract_step_dag(jx, n_stages=n_stages, n_rows=n_rows,
+                               edge_names=names)
+
+
+def choose_overlap_for(mesh, L: int, n_classes: int, config: ADMMConfig, *,
+                       V: int, h: int, costs=None, n_workers=None) -> bool:
+    """Replay-search the `overlap` knob for this training setup: trace both
+    step variants and keep the predicted-faster schedule
+    (:func:`repro.analysis.replay.choose_overlap`). With no cost table the
+    hand default (overlap on — the PR-4 result) comes back without tracing
+    anything."""
+    from repro.analysis import replay as rp
+    if costs is None:
+        return rp.choose_overlap(None, None, None)
+    kw = dict(V=V, h=h)
+    return rp.choose_overlap(
+        trace_step_dag(mesh, L, n_classes, config, overlap=False, **kw),
+        trace_step_dag(mesh, L, n_classes, config, overlap=True, **kw),
+        costs, n_workers=n_workers)
+
+
+def step_cost_model(mesh, L: int, n_classes: int, config: ADMMConfig,
+                    costs, *, V: int, h: int, grids_by_bits,
+                    mixed_width: bool = True, overlap: bool = False,
+                    n_workers=None):
+    """Build the :class:`repro.analysis.replay.ScheduleCostModel` pricing
+    THIS training setup's compiled step — the `cost_model` a
+    ``BitWidthController(objective="walltime")`` consumes.
+
+    ``mixed_width=True`` prices the padded-container step
+    (``distributed_train(mixed_width=True)``): the physical ppermute payload
+    is the fixed container capacity whatever the schedule says, so promoting
+    an edge's precision is free in predicted time — the walltime objective
+    then spends the whole container. ``mixed_width=False`` prices the
+    uniform-codec adaptive path (one managed edge, ``schedule == (bits,)``):
+    the packed payload grows with the scheduled width, so a promotion is
+    accepted exactly when the replay predicts the extra transfer stays
+    hidden under solver compute (on a bandwidth-starved link the bytes
+    floor survives; on this ring the slabs are small and it rarely does)."""
+    from repro.analysis import replay as rp
+    n_rows = 1
+    for a in ("pod", "data"):
+        n_rows *= mesh.shape.get(a, 1)
+    r0 = shard_rows(V, n_rows)[0]
+    slab = (1, r0, h)
+    u_bytes = FP32.payload_bytes(slab)
+    if mixed_width:
+        wire = PaddedWire.from_grids(grids_by_bits)
+        dag = trace_step_dag(mesh, L, n_classes, config, V=V, h=h,
+                             overlap=overlap, wire=wire)
+        cap = wire.capacity(slab)
+        fixed = {"q_fwd": cap, "p_bwd": cap, "u_fwd": u_bytes}
+        edge_bytes = lambda schedule: fixed
+    else:
+        # DAG structure is width-independent on the codec path (only the
+        # packed payload size moves) — trace once, reprice per schedule
+        dag = trace_step_dag(mesh, L, n_classes, config, V=V, h=h,
+                             overlap=overlap)
+
+        def edge_bytes(schedule):
+            codec = codec_for_grid(grids_by_bits[schedule[0]])
+            b = codec.payload_bytes(slab)
+            return {"q_fwd": b, "p_bwd": b, "u_fwd": u_bytes}
+    return rp.ScheduleCostModel(dag, costs, edge_bytes, n_workers=n_workers)
+
+
 def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
                       config: ADMMConfig, epochs: int, *, ledger=None,
                       controller=None, grids_by_bits=None,
-                      overlap: bool = False, chunk: int = 32,
-                      mixed_width: bool = False):
+                      overlap=False, chunk: int = 32,
+                      mixed_width: bool = False, cost_table=None):
     """End-to-end stage-parallel training loop (small meshes / tests).
 
     The no-controller path rides a chunked ``lax.scan`` driver
@@ -585,8 +700,18 @@ def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
     — the tail pair a finished run leaves in its carry (``*/inflight`` at
     iteration `epochs`) and any pair superseded by a schedule change
     (``*/dropped``). Bytes on the wire are bytes on the ledger.
+
+    ``overlap="replay"`` makes the knob a replay-searched choice: both step
+    variants are traced and the predicted-faster one runs
+    (:func:`choose_overlap_for`, priced by `cost_table` — a calibrated
+    :class:`repro.analysis.costs.CostTable`; without one the hand default,
+    overlap on, applies). The resolved value lands in ``hist["overlap"]``.
     """
     V, h = Xp.shape
+    if overlap == "replay":
+        overlap = choose_overlap_for(mesh, L, n_classes, config, V=V, h=h,
+                                     costs=cost_table)
+    overlap = bool(overlap)
     state = init_stack(key, Xp, L, config)
     dp = _dp_axes(mesh)
     specs = stack_partition_specs(mesh)
@@ -719,4 +844,5 @@ def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
             _record_qu_pair(ledger, epochs, mesh, L, V, h,
                             *codecs_for(cur_bits), "inflight")
     hist["n_compiled_steps"] = len(step_cache)
+    hist["overlap"] = overlap
     return state, hist

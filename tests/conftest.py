@@ -1,11 +1,14 @@
 """Test-session bootstrap.
 
-Shares the recursive jaxpr introspection machinery used by the trace-level
-dispatch tests (`count_primitive`, plus the collective-scheduling helpers
-`jaxprs_with`/`collective_profile` that the overlap battery uses to prove
-ppermutes moved off the critical path), and provides a minimal,
-deterministic stand-in for `hypothesis` when the real package is not
-installed (the pinned CI/container image ships without it).
+Re-exports the recursive jaxpr introspection machinery used by the
+trace-level dispatch tests (`count_primitive`, plus the collective-
+scheduling helpers `jaxprs_with`/`collective_profile` that the overlap
+battery uses to prove ppermutes moved off the critical path) from its
+library home `repro.analysis.jaxpr_tools` — the walkers graduated from
+test-only code when the replay cost model started building its task DAG
+from the same jaxpr walks. Also provides a minimal, deterministic stand-in
+for `hypothesis` when the real package is not installed (the pinned
+CI/container image ships without it).
 The shim implements exactly the API surface these tests use — ``given``,
 ``settings`` and the ``floats/integers/lists/sampled_from/composite``
 strategies — drawing a fixed number of pseudo-random examples from a
@@ -15,83 +18,18 @@ exercised. When `hypothesis` IS available it is used untouched.
 from __future__ import annotations
 
 import hashlib
+import os
 import sys
 import types
 
 import numpy as np
 
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
 
-def _sub_jaxprs(eqn):
-    """Nested (Closed)Jaxprs carried in an eqn's params (pjit bodies, loop
-    bodies, shard_map bodies, ...), normalized to raw Jaxprs."""
-    for v in eqn.params.values():
-        for x in (v if isinstance(v, (list, tuple)) else [v]):
-            if hasattr(x, "jaxpr"):              # ClosedJaxpr
-                yield x.jaxpr
-            elif hasattr(x, "eqns"):             # raw Jaxpr
-                yield x
-
-
-def count_primitive(jaxpr, name: str) -> int:
-    """Occurrences of primitive `name` in `jaxpr`, recursing into nested
-    (Closed)Jaxprs carried in eqn params (pjit bodies, loop bodies, ...)."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        for sub in _sub_jaxprs(eqn):
-            n += count_primitive(sub, name)
-    return n
-
-
-def count_primitives(jaxpr, names) -> int:
-    """`count_primitive` over a set of primitive names."""
-    return sum(count_primitive(jaxpr, n) for n in names)
-
-
-def jaxprs_with(jaxpr, name: str):
-    """Yield every (sub)jaxpr that holds a `name` eqn DIRECTLY (the body a
-    collective is scheduled in, not its enclosing pjit wrappers)."""
-    if any(e.primitive.name == name for e in jaxpr.eqns):
-        yield jaxpr
-    for eqn in jaxpr.eqns:
-        for sub in _sub_jaxprs(eqn):
-            yield from jaxprs_with(sub, name)
-
-
-def collective_profile(jaxpr, name: str = "ppermute",
-                       work=("dot_general", "pallas_call")):
-    """Schedule profile of every `name` collective: for each one, in program
-    order, a dict with
-
-      * ``dtype``   — wire dtype of the moved payload,
-      * ``carried`` — True iff NO later eqn in its body reads the result
-        (it leaves through the body's outputs — e.g. a double-buffered
-        in-flight slab consumed only by the NEXT iteration),
-      * ``work_to_consumer`` — solver-shaped primitives (`work`, counted
-        recursively) scheduled between the collective and the first eqn
-        that reads its result: >0 means the message latency hides behind
-        real compute, 0 means it sits on the critical path.
-    """
-    out = []
-    for body in jaxprs_with(jaxpr, name):
-        for i, eqn in enumerate(body.eqns):
-            if eqn.primitive.name != name:
-                continue
-            v = eqn.outvars[0]
-            consumers = [j for j in range(i + 1, len(body.eqns))
-                         if any(iv is v for iv in body.eqns[j].invars)]
-            between = 0
-            for j in range(i + 1, consumers[0]) if consumers else ():
-                eq = body.eqns[j]
-                if eq.primitive.name in work:
-                    between += 1
-                for sub in _sub_jaxprs(eq):
-                    between += count_primitives(sub, work)
-            out.append({"dtype": str(v.aval.dtype),
-                        "carried": not consumers,
-                        "work_to_consumer": between})
-    return out
+from repro.analysis.jaxpr_tools import (collective_profile,  # noqa: F401,E402
+                                        count_primitive, count_primitives,
+                                        jaxprs_with)
 
 
 try:  # pragma: no cover - prefer the real thing when present

@@ -102,17 +102,8 @@ def test_backtrack_forced_doublings_still_match(x64):
 # --- the 2-matmul guarantee (trace level) -----------------------------------
 
 def _count_dot_generals(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "dot_general":
-            n += 1
-        for v in eqn.params.values():
-            for x in (v if isinstance(v, (list, tuple)) else [v]):
-                if hasattr(x, "jaxpr"):          # ClosedJaxpr
-                    n += _count_dot_generals(x.jaxpr)
-                elif hasattr(x, "eqns"):         # raw Jaxpr
-                    n += _count_dot_generals(x)
-    return n
+    from repro.analysis.jaxpr_tools import count_primitive
+    return count_primitive(jaxpr, "dot_general")
 
 
 @pytest.mark.parametrize("tau0", [1e-6, 1e-2, 1.0])

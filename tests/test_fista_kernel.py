@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from conftest import count_primitive
+from repro.analysis.jaxpr_tools import count_primitive
 
 from repro.core import pdadmm, subproblems as sp
 from repro.core.pdadmm import ADMMConfig

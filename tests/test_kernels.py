@@ -131,7 +131,7 @@ RAGGED = [(2485, 384, 6), (2708, 100, 7), (3327, 513, 129), (97, 130, 40)]
 
 
 def _pallas_calls(fn, *args) -> int:
-    from conftest import count_primitive
+    from repro.analysis.jaxpr_tools import count_primitive
     return count_primitive(jax.make_jaxpr(fn)(*args).jaxpr, "pallas_call")
 
 

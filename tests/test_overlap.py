@@ -140,7 +140,7 @@ def test_overlap_moves_ppermutes_off_critical_path():
     ppermute is issued with the whole W-solve between it and its consumer.
     The paper-faithful ordering has every ppermute consumed immediately."""
     out = _run(PRELUDE + """
-from conftest import collective_profile
+from repro.analysis.jaxpr_tools import collective_profile
 V, h, L, C = 64, 32, 4, 4
 cfg = ADMMConfig(nu=1e-2, rho=1.0)
 state = SP.init_stack(jax.random.PRNGKey(0), jnp.zeros((V, h)), L, cfg)
@@ -174,7 +174,7 @@ def test_make_distributed_step_kwargs_observable():
     signature check below until it gets an observability assertion here."""
     out = _run(PRELUDE + """
 import inspect
-from conftest import collective_profile
+from repro.analysis.jaxpr_tools import collective_profile
 from repro.comm.codecs import GridCodec
 sig = inspect.signature(SP.make_distributed_step)
 kw = {n for n, p in sig.parameters.items()

@@ -341,6 +341,12 @@ for i, b in enumerate(wire.widths):
 # a schedule change is a VALUE change, not a new specialization
 if hasattr(cstep, "_cache_size"):
     assert cstep._cache_size() == 1, cstep._cache_size()
+# trace-level wire check (library walker): the p/q boundary exchanges ship
+# as uint8 containers whatever the active width, u stays fp32
+from repro.analysis.jaxpr_tools import collective_profile
+dts = sorted(p["dtype"] for p in collective_profile(
+    jax.make_jaxpr(cstep)(state0, *args, jnp.zeros((2, 2), jnp.int32)).jaxpr))
+assert dts == ["float32", "uint8", "uint8"], dts
 print("UNIFORM_CONTAINER_OK")
 """)
     assert "UNIFORM_CONTAINER_OK" in out

@@ -1,0 +1,417 @@
+"""Replay cost-model battery (repro.analysis.replay + its hooks).
+
+Structure mirrors the subsystem's three layers: DAG extraction must agree
+with the `collective_profile` ground truth on the real 2x2-mesh step (both
+codec paths, overlap on/off); the discrete-event replay must be a pure
+function of its inputs (determinism, no wall clock) with a critical path
+that actually binds (zeroing the slowest edge strictly reduces predicted
+time); and the searches built on top — walltime-objective controller,
+psum-mode pricing, the overlap knob — must respect their contracts and
+hand-rule fallbacks. The predicted-vs-measured regression against the live
+CPU-sim bench pair is `slow` (full-suite leg only); everything else is
+trace-only or pure Python and runs in both REPRO_KERNELS legs.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.costs import CostTable
+from repro.analysis.replay import (CommEvent, ScheduleCostModel, Segment,
+                                   StepDag, choose_psum_mode, replay)
+from repro.comm.controller import BitWidthController, ControllerConfig
+from repro.comm.ledger import CommLedger
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(code: str) -> str:
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    return r.stdout
+
+
+PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src"); sys.path.insert(0, "tests")
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import compat_make_mesh
+from repro.core.pdadmm import ADMMConfig
+from repro.core import quantize
+from repro.parallel import stage_parallel as SP
+mesh = compat_make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
+"""
+
+
+# ---------------------------------------------------------------------------
+# pure-Python layer: synthetic DAGs, no devices
+# ---------------------------------------------------------------------------
+
+def _costs(**over):
+    c = CostTable()
+    base = {"step:dispatch": 1e-4, "collective:ppermute": 2e-4,
+            "collective:psum": 5e-4, "collective:all_gather": 5e-4,
+            "collective:ppermute:issue": 1e-5, "collective:psum:issue": 1e-5,
+            "collective:all_gather:issue": 1e-5,
+            "rate:dot_flops": 2e10, "rate:eltwise_bytes": 1e9,
+            "rate:op_overhead": 5e-8,
+            "link:latency": 1e-6, "link:bandwidth": 1e8}
+    base.update(over)
+    for k, v in base.items():
+        c.set(k, v)
+    return c
+
+
+def _toy_dag():
+    """2-stage ring, baseline-shaped: entry blocking ppermute, solver
+    segment, hidden ppermute consumed after more work, tail psum barrier."""
+    return StepDag([
+        CommEvent(0, "ppermute", "float32", 4096, carried=False,
+                  work_to_consumer=0, consumer_index=1, edge="q_fwd"),
+        Segment(1, flops=2e6, bytes=4e6, n_eqns=200),
+        CommEvent(2, "ppermute", "float32", 4096, carried=False,
+                  work_to_consumer=3, consumer_index=3, edge="p_bwd"),
+        Segment(3, flops=1e6, bytes=2e6, n_eqns=100),
+        CommEvent(4, "psum", "float32", 4, carried=False,
+                  work_to_consumer=0, consumer_index=None),
+    ], n_stages=2, n_rows=2)
+
+
+def test_replay_deterministic():
+    """Same DAG + costs -> bit-identical prediction, every field (the DES
+    never consults a clock or RNG)."""
+    dag, costs = _toy_dag(), _costs()
+    a = replay(dag, costs, n_iterations=4)
+    b = replay(dag, costs, n_iterations=4)
+    assert a.step_time_s == b.step_time_s
+    assert a.total_time_s == b.total_time_s
+    assert a.critical_path == b.critical_path
+    assert a.per_stage_busy_s == b.per_stage_busy_s
+    assert a.step_time_s > 0
+
+
+def test_replay_steady_state_window():
+    """Step time is the last-iteration window: dispatch/priming cost stays
+    in iteration 0, so more iterations never inflate the per-step figure."""
+    dag, costs = _toy_dag(), _costs()
+    t4 = replay(dag, costs, n_iterations=4).step_time_s
+    t8 = replay(dag, costs, n_iterations=8).step_time_s
+    assert t4 == pytest.approx(t8, rel=1e-9)
+
+
+def test_critical_path_binds():
+    """The slowest comm edge on the critical path actually binds: zeroing
+    its bytes strictly reduces the predicted step time."""
+    costs = _costs(**{"link:bandwidth": 1e6})   # starved link: wires bind
+    dag = _toy_dag()
+    res = replay(dag, costs)
+    slow = res.critical_comm()
+    assert slow, "no comm on the critical path"
+    name = next(lbl for lbl, _ in slow if lbl in ("q_fwd", "p_bwd"))
+    faster = replay(dag.with_wire_bytes({name: 0}), costs)
+    assert faster.step_time_s < res.step_time_s
+
+
+def test_with_wire_bytes_reprices_only_named_edges():
+    dag = _toy_dag()
+    re = dag.with_wire_bytes({"q_fwd": 123})
+    by_edge = {e.edge: e.wire_bytes for e in re.comm_events if e.edge}
+    assert by_edge["q_fwd"] == 123 and by_edge["p_bwd"] == 4096
+    # original untouched
+    assert dag.comm_events[0].wire_bytes == 4096
+
+
+def test_schedule_cost_model_memoizes_and_prices():
+    dag, costs = _toy_dag(), _costs(**{"link:bandwidth": 1e6})
+    calls = []
+
+    def edge_bytes(schedule):
+        calls.append(schedule)
+        b = 512 * schedule[0]
+        return {"q_fwd": b, "p_bwd": b}
+
+    cm = ScheduleCostModel(dag, costs, edge_bytes)
+    t4, t16 = cm((4,)), cm((16,))
+    assert t4 < t16                        # wider wire, slower on this link
+    cm((4,))
+    assert calls == [(4,), (16,)]          # memoized second lookup
+
+
+# ---------------------------------------------------------------------------
+# walltime-objective controller (unit: fake cost models)
+# ---------------------------------------------------------------------------
+
+def _ctl(objective, cost_model=None, **kw):
+    cfg = ControllerConfig(allowed_bits=(4, 8, 16), min_bits=4, max_bits=16,
+                           min_dwell=1, hysteresis=0.0, objective=objective,
+                           **kw)
+    return BitWidthController([1024, 1024], cfg, cost_model=cost_model)
+
+
+def test_walltime_requires_cost_model():
+    with pytest.raises(ValueError, match="cost_model"):
+        _ctl("walltime")
+    with pytest.raises(ValueError, match="objective"):
+        BitWidthController([1], ControllerConfig(objective="latency"))
+
+
+def test_walltime_promotes_when_time_is_flat():
+    """Container-wire shape: predicted time is schedule-independent, so the
+    walltime objective spends the headroom — every edge lands at max bits
+    while the bytes floor stays where the residual policy put it."""
+    flat = lambda schedule: 1.0
+    wt = _ctl("walltime", flat)
+    by = _ctl("bytes")
+    sched_w = wt.assign([1.0, 1.0], 0)
+    sched_b = by.assign([1.0, 1.0], 0)
+    assert sched_b == (4, 4)               # at-peak residual -> coarse floor
+    assert sched_w == (16, 16)             # promotion is free in time
+    assert wt._bits == [4, 4]              # the accuracy floor is untouched
+    assert flat(sched_w) <= flat(sched_b)
+
+
+def test_walltime_floor_survives_when_time_grows():
+    """Codec-wire shape on a starved link: any promotion is predicted
+    slower, so the emitted schedule IS the bytes floor."""
+    priced = lambda schedule: sum(schedule)
+    wt = _ctl("walltime", priced)
+    assert wt.assign([1.0, 1.0], 0) == (4, 4)
+
+
+def test_walltime_respects_byte_budget():
+    """Promotions are capped by the per-iteration budget even when time is
+    flat: with room for only one edge at 16 bits, exactly one gets it."""
+    flat = lambda schedule: 1.0
+    # floor spend: 2 edges * 1024 el * 4 bits / 8 = 1024 B/iter. A 3072 B
+    # per-iter budget fits one edge at 16 and the other at 8 — but never
+    # both at 16 (4096). Promotion takes the largest affordable width.
+    wt = _ctl("walltime", flat, byte_budget=3 * 1024.0 * 10, total_iters=10)
+    sched = wt.assign([1.0, 1.0], 0)
+    assert sched == (16, 8)
+    assert wt.spent_bytes == 1024 * 16 / 8 + 1024 * 8 / 8   # emitted charge
+
+
+def test_bytes_objective_unchanged_and_charges_floor():
+    by = _ctl("bytes")
+    sched = by.assign([1.0, 1.0], 0)
+    assert sched == by.schedule == (4, 4)
+    assert by.spent_bytes == 2 * 1024 * 4 / 8
+
+
+# ---------------------------------------------------------------------------
+# psum-mode pricing: hand-rule fallback and bandwidth-dominated agreement
+# ---------------------------------------------------------------------------
+
+def test_choose_psum_mode_fallback_and_agreement():
+    from repro.comm.codecs import GridCodec
+    from repro.comm.transport import psum_mode
+    from repro.core.quantize import uniform_grid
+    c4 = GridCodec(uniform_grid(4, -3.0, 3.0))
+    c16 = GridCodec(uniform_grid(16, -3.0, 3.0))
+    # no costs -> exactly the hand rule
+    for codec, w in ((c4, 8), (c16, 8), (c4, 32)):
+        assert choose_psum_mode(codec, (256, 32), w) == psum_mode(codec, w)
+    # bandwidth-dominated limit (no latency, free compute): the narrow
+    # codec's packed gather wins exactly as the ring rule says; for the
+    # wide codec gather correctly loses (its ring bytes exceed BOTH psum
+    # realizations, which move identical bytes — plain psum then prices at
+    # or under code_psum, having no encode pass)
+    costs = _costs(**{"link:latency": 0.0, "link:bandwidth": 1e6,
+                      "rate:eltwise_bytes": 1e15})
+    assert choose_psum_mode(c4, (256, 32), 8, costs) == "gather"
+    assert choose_psum_mode(c16, (256, 32), 8, costs) in ("psum",
+                                                          "code_psum")
+
+
+# ---------------------------------------------------------------------------
+# CommLedger.per_edge_iteration_wire
+# ---------------------------------------------------------------------------
+
+def test_per_edge_iteration_wire():
+    led = CommLedger()
+    led.record(0, "q_fwd", "ppermute", 100, 8, 100)
+    led.record(0, "q_fwd", "ppermute", 100, 8, 100)        # same edge, adds
+    led.record(0, "p_bwd", "ppermute", 100, 8, 50, wire_bytes=400)
+    led.record(1, "q_fwd", "ppermute", 100, 8, 77)
+    led.record_span(1, 3, "u_fwd", "ppermute", 100, 32, 400)
+    assert led.per_edge_iteration_wire(0) == {"q_fwd": 200, "p_bwd": 400}
+    assert led.per_edge_iteration_wire(1) == {"q_fwd": 77, "u_fwd": 400}
+    assert led.per_edge_iteration_wire(3) == {"u_fwd": 400}  # span end
+    assert led.per_edge_iteration_wire(4) == {}
+    # physical wire bytes, not logical payload (the container case above)
+    assert led.per_edge()["p_bwd"] == 50
+
+
+# ---------------------------------------------------------------------------
+# DAG extraction vs collective_profile on the real step (subprocess: the
+# 2x2 mesh needs forced CPU devices; trace-only, nothing compiles)
+# ---------------------------------------------------------------------------
+
+def test_dag_matches_collective_profile():
+    """For every variant (overlap on/off x codec/container wire) the
+    extracted DAG's ppermute events agree with `collective_profile` event-
+    by-event on (carried, work_to_consumer), the psum count matches
+    `count_primitive`, and edge labels follow issue order."""
+    _run(PRELUDE + """
+from conftest import collective_profile, count_primitive
+V, h, L, C = 64, 32, 4, 4
+grids = {b: quantize.uniform_grid(b, -2.0, 6.0) for b in (4, 8, 16)}
+wire = SP.PaddedWire.from_grids(grids)
+cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, quantize_q=True,
+                 grid=quantize.uniform_grid(8, -2.0, 6.0))
+sds = jax.ShapeDtypeStruct
+for overlap in (False, True):
+    for w in (None, wire):
+        dag = SP.trace_step_dag(mesh, L, C, cfg, V=V, h=h, overlap=overlap,
+                                wire=w)
+        # rebuild the reference jaxpr exactly like the tracer does
+        step, _ = SP.make_distributed_step(mesh, L, C, cfg, overlap=overlap,
+                                           wire=w)
+        st = SP.StackState(p=sds((L, V, h), jnp.float32),
+                           W=sds((L, h, h), jnp.float32),
+                           b=sds((L, h), jnp.float32),
+                           z=sds((L, V, h), jnp.float32),
+                           q=sds((L, V, h), jnp.float32),
+                           u=sds((L, V, h), jnp.float32))
+        args = [sds((V, h), jnp.float32), sds((V,), jnp.int32),
+                sds((V,), jnp.float32)]
+        if w is not None:
+            args.append(sds((2, 2), jnp.int32))
+        if overlap:
+            from repro.comm.codecs import codec_for_grid
+            primer = SP.make_overlap_primer(
+                mesh, codec_for_grid(cfg.grid), wire=w)
+            pargs = (st.q, st.u) + ((args[-1],) if w is not None else ())
+            carry = (st, jax.eval_shape(primer, *pargs))
+        else:
+            carry = st
+        jx = jax.make_jaxpr(step)(carry, *args)
+        prof = collective_profile(jx.jaxpr)
+        pp = [e for e in dag.comm_events if e.prim == "ppermute"]
+        assert [(e.carried, e.work_to_consumer) for e in pp] == \
+            [(p["carried"], p["work_to_consumer"]) for p in prof], \
+            (overlap, w is not None)
+        assert dag.counts()["psum"] == count_primitive(jx.jaxpr, "psum")
+        assert [e.edge for e in pp] == (
+            ["p_bwd", "q_fwd", "u_fwd"] if overlap
+            else ["q_fwd", "u_fwd", "p_bwd"])
+        assert sum(e.carried for e in pp) == (2 if overlap else 0)
+        assert dag.n_stages == 2 and dag.n_rows == 2
+print("dag-vs-profile OK")
+""")
+
+
+def test_replay_searched_choices_on_real_step():
+    """choose_overlap_for: hand default without costs; with synthetic costs
+    the overlap variant is never predicted slower (issue tolls are clamped
+    to the blocking toll). step_cost_model(mixed) prices every schedule at
+    the container's fixed capacity, so a walltime controller promotes to
+    the widest width at unchanged predicted time."""
+    _run(PRELUDE + """
+from repro.analysis.costs import CostTable
+from repro.comm.controller import BitWidthController, ControllerConfig, \\
+    stage_ring_edges
+V, h, L, C = 64, 32, 4, 4
+cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, quantize_q=True,
+                 grid=quantize.uniform_grid(8, -2.0, 6.0))
+costs = CostTable()
+for k, v in {"step:dispatch": 1e-4, "collective:ppermute": 2e-4,
+             "collective:psum": 5e-4, "collective:all_gather": 5e-4,
+             "collective:ppermute:issue": 1e-5,
+             "collective:psum:issue": 1e-5,
+             "collective:all_gather:issue": 1e-5,
+             "rate:dot_flops": 2e10, "rate:eltwise_bytes": 1e10,
+             "rate:op_overhead": 5e-8,
+             "link:latency": 1e-6, "link:bandwidth": 1e10}.items():
+    costs.set(k, v)
+assert SP.choose_overlap_for(mesh, L, C, cfg, V=V, h=h) is True  # hand rule
+assert SP.choose_overlap_for(mesh, L, C, cfg, V=V, h=h, costs=costs) is True
+
+grids = {b: quantize.uniform_grid(b, -2.0, 6.0) for b in (4, 8, 16)}
+cm = SP.step_cost_model(mesh, L, C, cfg, costs, V=V, h=h,
+                        grids_by_bits=grids, mixed_width=True)
+edges = stage_ring_edges(2, V, h)
+kw = dict(allowed_bits=(4, 8, 16), min_bits=4, max_bits=16, min_dwell=1,
+          hysteresis=0.0)
+wt = BitWidthController(edges, ControllerConfig(objective="walltime", **kw),
+                        cost_model=cm)
+by = BitWidthController(edges, ControllerConfig(**kw))
+sw = wt.assign([1.0, 1.0], 0)
+sb = by.assign([1.0, 1.0], 0)
+assert sw == (16, 16) and sb == (4, 4), (sw, sb)
+assert cm(sw) <= cm(sb) * (1 + 1e-9)
+print("replay-searched choices OK")
+""")
+
+
+# ---------------------------------------------------------------------------
+# predicted vs measured on the live bench pair (slow: full-suite leg)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_predicted_vs_measured_overlap_pair():
+    """The acceptance regression: calibrate from micro-runs only (never the
+    step under test), predict the overlap on/off pair at 8 CPU devices in
+    the interpret-kernel regime, and land within 40% of measured with the
+    predicted ordering overlap <= baseline. Measured-direction agreement is
+    asserted only when the measured gap is big enough to be signal (the
+    time-sliced single-core simulator is +-15% noisy run-to-run)."""
+    out = _run("""
+import os, json, time
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["REPRO_KERNELS"] = "interpret"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import compat_make_mesh
+from repro.core.pdadmm import ADMMConfig
+from repro.core import quantize
+from repro.comm.codecs import codec_for_grid
+from repro.parallel import stage_parallel as SP
+from repro.analysis.replay import calibrate, replay
+
+V, h, L, C, iters = 128, 32, 8, 4, 10
+mesh = compat_make_mesh((2, 4), ("data", "model"))
+cfg = ADMMConfig(nu=1e-2, rho=1.0, quantize_p=True, quantize_q=True,
+                 grid=quantize.uniform_grid(8, -2.0, 6.0))
+key = jax.random.PRNGKey(0)
+Xp = jax.random.normal(key, (V, h))
+state0 = SP.init_stack(key, Xp, L, cfg)
+put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
+state0 = jax.tree.map(put, state0, SP.stack_partition_specs(mesh))
+args = (put(Xp, P("data")), put(jnp.zeros((V,), jnp.int32), P("data")),
+        put(jnp.ones((V,)), P("data")))
+costs = calibrate(mesh, V=V, h=h)
+res = {}
+for overlap in (False, True):
+    step, _ = SP.make_distributed_step(mesh, L, C, cfg, overlap=overlap)
+    carry = state0
+    if overlap:
+        primer = SP.make_overlap_primer(mesh, codec_for_grid(cfg.grid))
+        carry = (state0, primer(state0.q, state0.u))
+    carry, _m = step(carry, *args)
+    jax.block_until_ready(carry)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        carry, _m = step(carry, *args)
+    jax.block_until_ready(carry)
+    ms = (time.perf_counter() - t0) / iters * 1e3
+    dag = SP.trace_step_dag(mesh, L, C, cfg, V=V, h=h, overlap=overlap)
+    res[overlap] = (ms, replay(dag, costs).step_time_ms)
+print(json.dumps({"base": res[False], "over": res[True]}))
+""")
+    import json
+    data = json.loads(out.strip().splitlines()[-1])
+    (base_ms, base_pred) = data["base"]
+    (over_ms, over_pred) = data["over"]
+    assert abs(base_pred - base_ms) / base_ms <= 0.40, data
+    assert abs(over_pred - over_ms) / over_ms <= 0.40, data
+    # predicted ordering is deterministic: overlap never predicted slower
+    assert over_pred <= base_pred * (1 + 1e-9), data
+    # measured direction must agree when the measured gap is clear signal
+    if abs(base_ms - over_ms) / base_ms > 0.12:
+        assert (over_ms < base_ms) == (over_pred <= base_pred), data
