@@ -33,6 +33,12 @@ the walltime-objective controller's schedules against the bytes floor on
 the mixed-width bench. The `control_interval` row sweeps the adaptive
 loop's schedule-lag vs host-sync tradeoff at interval ∈ {1, 4, 16}.
 
+The `faults` row prices fault tolerance (repro.comm.faults): step-time
+overhead of the integrity-header sentinels, objective/step-time degradation
+under injected wire bit-flips at rate ∈ {0, 0.05, 0.2} (every one detected
+and recovered in-step off the last-good slabs), and the wall-clock cost of
+a checkpoint rollback when sneaky corruption slips past the header.
+
 Distributed rows run in a subprocess with 8 forced CPU devices so the
 device-count flag never leaks into this process; `--smoke` runs every row
 at small shapes and writes BENCH_comm.json (the CI bench-smoke artifact).
@@ -540,6 +546,110 @@ def bench_control_interval(smoke: bool = False):
     return out
 
 
+_FAULTS_SNIPPET = """
+import os, json, time
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import shutil, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import compat_make_mesh
+from repro.core.pdadmm import ADMMConfig
+from repro.comm import faults as F
+from repro.comm.ledger import CommLedger
+from repro.parallel import stage_parallel as SP
+
+V, h, L, C, epochs = %(V)d, %(h)d, %(L)d, 4, %(epochs)d
+mesh = compat_make_mesh((2, 4), ("data", "model"))
+key = jax.random.PRNGKey(0)
+Xp = jax.random.normal(key, (V, h))
+labels = jax.random.randint(jax.random.PRNGKey(1), (V,), 0, C)
+masks = {"train": jnp.ones((V,))}
+cfg = ADMMConfig(nu=1.0, rho=1.0)
+out = {"V": V, "h": h, "L": L, "epochs": epochs}
+
+def timed(**kw):
+    t0 = time.perf_counter()
+    _, hist = SP.distributed_train(mesh, key, Xp, labels, masks, L, C, cfg,
+                                   epochs, **kw)
+    return (time.perf_counter() - t0) * 1e3 / epochs, hist
+
+# sentinel overhead: the +8 B header pair and verdict logic per exchange.
+# Every case below pays one compile inside its own distributed_train call,
+# so the per-epoch numbers are comparable case-to-case (not compile-free).
+base_ms, base_hist = timed()
+sent_ms, sent_hist = timed(health=True)
+out["plain_step_ms"] = round(base_ms, 3)
+out["sentinel_step_ms"] = round(sent_ms, 3)
+out["sentinel_overhead"] = round(sent_ms / base_ms - 1, 4)
+out["clean_objective"] = round(base_hist["objective"][-1], 4)
+assert sent_hist["objective"] == base_hist["objective"]  # identity, again
+
+# chaos degradation sweep: objective + step time vs flip rate (in-step
+# recovery only — detected flips are replaced by the last good slab)
+out["flip_sweep"] = {}
+for rate in (0.0, 0.05, 0.2):
+    plan = F.FaultPlan(seed=1, flip_rate=rate)
+    led = CommLedger()
+    ms, hist = timed(faults=plan, ledger=led)
+    f = hist["faults"]
+    assert f["detected"] == f["recovered"], f
+    out["flip_sweep"]["%%.2f" %% rate] = {
+        "step_ms": round(ms, 3),
+        "objective": round(hist["objective"][-1], 4),
+        "degradation": round(hist["objective"][-1]
+                             - base_hist["objective"][-1], 4),
+        "injected": f["injected"], "recovered": f["recovered"],
+    }
+
+# rollback recovery: sneaky corruption past the header -> sentinel trips ->
+# restore from checkpoint; recovery wall time is the chaos run's overhead
+# over the clean run amortized per rollback
+plan = F.FaultPlan(seed=11, sneaky_rate=0.08, flips_per_event=6)
+d = tempfile.mkdtemp()
+t0 = time.perf_counter()
+_, hist = SP.distributed_train(mesh, key, Xp, labels, masks, L, C, cfg,
+                               epochs, faults=plan, ckpt=d, ckpt_every=2)
+chaos_ms = (time.perf_counter() - t0) * 1e3
+shutil.rmtree(d)
+n_rb = hist["faults"]["rolled_back"]
+assert n_rb >= 1, hist["faults"]
+clean_ms = base_ms * epochs
+out["rollbacks"] = n_rb
+out["rollback_recovery_ms"] = round(max(chaos_ms - clean_ms, 0.0) / n_rb, 3)
+out["chaos_final_objective"] = round(hist["objective"][-1], 4)
+print(json.dumps(out))
+"""
+
+
+def bench_faults(smoke: bool = False):
+    """The PR-7 fault-tolerance row: sentinel (integrity-header) step
+    overhead vs the plain step, objective/step-time degradation vs injected
+    flip rate (all in-step recovered off the last-good slabs), and the
+    wall-clock cost of a checkpoint rollback when sneaky corruption gets
+    past the header and trips the objective/finite sentinels."""
+    V, h, L, epochs = (64, 32, 8, 8) if smoke else (128, 32, 8, 20)
+    code = _FAULTS_SNIPPET % {"V": V, "h": h, "L": L, "epochs": epochs}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    data = json.loads(r.stdout.strip().splitlines()[-1])
+    header = ["case", "step_ms", "final_objective", "injected", "recovered"]
+    rows = [["plain", data["plain_step_ms"], data["clean_objective"], 0, 0],
+            ["sentinel", data["sentinel_step_ms"], data["clean_objective"],
+             0, 0]]
+    for rate, row in sorted(data["flip_sweep"].items()):
+        rows.append([f"flip_{rate}", row["step_ms"], row["objective"],
+                     row["injected"], row["recovered"]])
+    rows.append(["sneaky_rollback", "-", data["chaos_final_objective"],
+                 "-", f"{data['rollbacks']} rollbacks @ "
+                      f"{data['rollback_recovery_ms']} ms"])
+    write_csv("comm_faults", header, rows)
+    print_rows("comm_faults (wire chaos: sentinel overhead, flip sweep, "
+               "rollback recovery)", header, rows)
+    return data
+
+
 def write_bench_json(**rows):
     (ROOT / "BENCH_comm.json").write_text(
         json.dumps(rows, indent=2) + "\n")
@@ -550,7 +660,8 @@ def run_smoke():
                      allreduce=bench_allreduce(smoke=True),
                      mixed_width=bench_mixed_width(smoke=True),
                      costmodel=bench_costmodel(smoke=True),
-                     control_interval=bench_control_interval(smoke=True))
+                     control_interval=bench_control_interval(smoke=True),
+                     faults=bench_faults(smoke=True))
 
 
 def run(epochs: int = 30, hidden: int = 100, layers: int = 10):
@@ -581,7 +692,8 @@ def run(epochs: int = 30, hidden: int = 100, layers: int = 10):
                      allreduce=bench_allreduce(),
                      mixed_width=bench_mixed_width(),
                      costmodel=bench_costmodel(),
-                     control_interval=bench_control_interval())
+                     control_interval=bench_control_interval(),
+                     faults=bench_faults())
     return rows
 
 
@@ -589,7 +701,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="overlap/allreduce/mixed_width/costmodel/"
-                         "control_interval rows only, small shapes "
+                         "control_interval/faults rows only, small shapes "
                          "(CI artifact)")
     if ap.parse_args().smoke:
         run_smoke()

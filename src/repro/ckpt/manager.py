@@ -51,6 +51,15 @@ class CheckpointManager:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        # reap stale .tmp_* staging dirs from a save() that died mid-write
+        # (a crash between mkdtemp and os.replace leaks one; only the
+        # atomic rename ever publishes a checkpoint, so anything still
+        # named .tmp_* is garbage by construction)
+        for stale in self.dir.glob(".tmp_*"):
+            if stale.is_dir():
+                shutil.rmtree(stale, ignore_errors=True)
+            else:
+                stale.unlink(missing_ok=True)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):

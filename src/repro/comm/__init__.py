@@ -12,12 +12,20 @@ Everything that crosses a link lives here:
   * :mod:`repro.comm.transport`  — neighbor-exchange and all-reduce entry
     points used by ``parallel/stage_parallel.py`` and
     ``parallel/collectives.py`` (no other module hand-rolls encode/decode).
+  * :mod:`repro.comm.faults`     — deterministic wire fault injection +
+    checksum/seqno integrity sentinels (the fault-tolerance layer behind
+    ``distributed_train(faults=/health=/ckpt=)``).
 """
 from repro.comm.codecs import (AffineCodec, Fp32Codec, GridCodec, WireCodec,
                                codec_for_bits, codec_for_grid,
                                encode_with_error_feedback)
 from repro.comm.controller import BitWidthController, ControllerConfig
-from repro.comm.ledger import CommLedger
+from repro.comm.faults import (EDGES, SENTINEL_HEADER_BYTES, FaultControls,
+                               FaultPlan, GoodSlabs, RecoveryConfig,
+                               SentinelExchange, checksum_header, flip_bits,
+                               flip_payload, null_controls, payload_checksum,
+                               verify_header)
+from repro.comm.ledger import CommLedger, FaultRecord
 from repro.comm.transport import (ContainerExchange, NeighborExchange,
                                   PaddedWire, PsumWireCost, psum_mode,
                                   psum_wire_bytes, psum_with_error_feedback,
@@ -26,7 +34,11 @@ from repro.comm.transport import (ContainerExchange, NeighborExchange,
 __all__ = [
     "AffineCodec", "Fp32Codec", "GridCodec", "WireCodec",
     "codec_for_bits", "codec_for_grid", "encode_with_error_feedback",
-    "BitWidthController", "ControllerConfig", "CommLedger",
+    "BitWidthController", "ControllerConfig", "CommLedger", "FaultRecord",
+    "EDGES", "SENTINEL_HEADER_BYTES", "FaultControls", "FaultPlan",
+    "GoodSlabs", "RecoveryConfig", "SentinelExchange", "checksum_header",
+    "flip_bits", "flip_payload", "null_controls", "payload_checksum",
+    "verify_header",
     "ContainerExchange", "NeighborExchange", "PaddedWire", "PsumWireCost",
     "psum_mode", "psum_wire_bytes", "psum_with_error_feedback",
     "quantized_psum", "record_psum",

@@ -109,6 +109,7 @@ class BitWidthController:
         self._emitted: Tuple[int, ...] = tuple(self._bits)
         self.spent_bytes: float = 0.0
         self.n_switches: int = 0
+        self._cooldown_until: int = -1   # force_widest() window end
 
     # -- policy ------------------------------------------------------------
     def _desired(self, ratio: float) -> int:
@@ -183,9 +184,50 @@ class BitWidthController:
         self._emitted = (self._walltime_promote(iteration)
                          if cfg.objective == "walltime"
                          else tuple(self._bits))
+        if iteration < self._cooldown_until:
+            # post-rollback cooldown (force_widest): emit the widest legal
+            # width on every edge, overriding even the budget — recovering
+            # from corruption outranks the byte target for a few steps. The
+            # floor/peaks keep evolving underneath, so the policy resumes
+            # exactly where it would have been once the window closes.
+            self._emitted = (self._legal()[-1],) * len(self._bits)
         self.spent_bytes += sum(self._edge_bytes(i, b)
                                 for i, b in enumerate(self._emitted))
         return self._emitted
+
+    def force_widest(self, iteration: int, cooldown: int) -> None:
+        """Recovery hook (rollback response): make every `assign` in
+        iterations ``[iteration, iteration + cooldown)`` emit the widest
+        legal width — quantization noise must not be in the suspect set
+        while the run re-converges past a corruption."""
+        self._cooldown_until = max(self._cooldown_until,
+                                   int(iteration) + int(cooldown))
+
+    # -- checkpoint support -------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable control state (everything `assign` evolves) —
+        saved into checkpoint manifests so a restored run resumes the
+        schedule policy mid-flight instead of from the floor."""
+        return {
+            "bits": list(self._bits),
+            "peak": list(self._peak),
+            "global_peak": self._global_peak,
+            "last_switch": list(self._last_switch),
+            "emitted": list(self._emitted),
+            "spent_bytes": self.spent_bytes,
+            "n_switches": self.n_switches,
+            "cooldown_until": self._cooldown_until,
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        self._bits = [int(b) for b in sd["bits"]]
+        self._peak = [float(p) for p in sd["peak"]]
+        self._global_peak = float(sd["global_peak"])
+        self._last_switch = [int(i) for i in sd["last_switch"]]
+        self._emitted = tuple(int(b) for b in sd["emitted"])
+        self.spent_bytes = float(sd["spent_bytes"])
+        self.n_switches = int(sd["n_switches"])
+        self._cooldown_until = int(sd.get("cooldown_until", -1))
 
     def _walltime_promote(self, iteration: int) -> Tuple[int, ...]:
         """Promote each edge of the accuracy floor to the finest legal width
@@ -275,7 +317,8 @@ def admm_edges(dims, V: int) -> List[int]:
 def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
                    controller: BitWidthController, ledger,
                    grids_by_bits: Dict[int, "object"],
-                   control_interval: int = 1):
+                   control_interval: int = 1, ckpt=None, ckpt_every: int = 0,
+                   resume: bool = False, recovery=None, fault_hook=None):
     """pdADMM-G-Q training with the controller assigning each boundary's
     p/q — and, with `admm_edges`-shaped controllers, u — exchange a
     bit-width every iteration; every payload goes on the ledger. Returns
@@ -299,6 +342,19 @@ def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
     the semantics are bit-for-bit the legacy per-iteration loop; larger
     intervals trade up to ``control_interval - 1`` iterations of schedule
     lag for proportionally fewer device→host syncs.
+
+    Fault tolerance: `ckpt` (a CheckpointManager or directory) +
+    ``ckpt_every=k`` saves state/controller/ledger atomically every k
+    iterations and ``resume=True`` restores the latest checkpoint first.
+    `fault_hook` — ``hook(iteration, state) -> state`` — is the chaos seam
+    (corrupt the state a chunk trains on, deterministically). When either
+    is present, every chunk's trailing objective/residual is health-checked
+    (non-finite or a spike past the last accepted objective, the
+    :data:`repro.comm.faults.SPIKE_TOL` rule): a bad chunk is DISCARDED and
+    rolled back to the latest checkpoint (or the initial state), with
+    :meth:`BitWidthController.force_widest` holding the widest width for
+    ``recovery.cooldown`` control steps. Without these kwargs the loop is
+    unchanged.
     """
     from repro.comm import ledger as ledger_mod
     from repro.comm.codecs import FP32, AffineCodec, GridCodec
@@ -346,13 +402,73 @@ def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
             "schedules": []}
     bound_res = [0.0] * n_bound
     interval = max(1, int(control_interval))
+
+    from repro.comm.faults import SPIKE_TOL, RecoveryConfig
+    mgr = None
+    if ckpt is not None:
+        from repro.ckpt.manager import CheckpointManager
+        mgr = ckpt if hasattr(ckpt, "save") else CheckpointManager(str(ckpt))
+    if (resume or ckpt_every) and mgr is None:
+        raise ValueError("resume=/ckpt_every= need ckpt= (a "
+                         "CheckpointManager or a directory path)")
+    guard = mgr is not None or fault_hook is not None
+    rec = recovery if recovery is not None else RecoveryConfig()
+    state0, ctl_state0 = state, controller.state_dict()
+    prev_obj = float("inf")
+    n_rb = 0
     e = 0
+
+    def _trim(at):
+        for k in ("objective", "residual", "schedules"):
+            del hist[k][at:]
+
+    def _restore():
+        nonlocal state, e, prev_obj, bound_res
+        state, manifest = mgr.restore(like=state)
+        ex = manifest.get("extra") or {}
+        e = int(ex.get("iteration", 0))
+        prev_obj = float(ex.get("prev_obj", float("inf")))
+        bound_res = [float(r) for r in ex.get("bound_res",
+                                              [0.0] * n_bound)]
+        if ex.get("controller"):
+            controller.load_state_dict(ex["controller"])
+        _trim(e)
+
+    if resume and mgr is not None and mgr.latest_step() is not None:
+        _restore()
+
     while e < epochs:
         residuals = bound_res + bound_res if manage_u else bound_res
         sched = controller.assign(residuals, e)
         c = min(interval, epochs - e)
+        if fault_hook is not None:
+            state = fault_hook(e, state)
         state, ms = pdadmm.run_chunked(
             step_for(sched), state, (X, labels, masks["train"]), c, chunk=c)
+        if guard:
+            obj_last = float(ms["objective"][-1])
+            res_last = float(ms["residual"][-1])
+            bad = (not math.isfinite(obj_last)
+                   or not math.isfinite(res_last)
+                   or (math.isfinite(prev_obj) and obj_last > prev_obj
+                       + SPIKE_TOL * (1.0 + abs(prev_obj))))
+            if bad:
+                n_rb += 1
+                if n_rb > rec.max_rollbacks:
+                    raise RuntimeError(
+                        f"train_adaptive: {n_rb} rollbacks exceeded "
+                        f"max_rollbacks={rec.max_rollbacks}")
+                if ledger is not None:
+                    ledger.record_fault(e, "step", "rolled_back", 1)
+                if mgr is not None and mgr.latest_step() is not None:
+                    _restore()
+                else:
+                    state, e, prev_obj = state0, 0, float("inf")
+                    bound_res = [0.0] * n_bound
+                    controller.load_state_dict(dict(ctl_state0))
+                    _trim(0)
+                controller.force_widest(e, rec.cooldown)
+                continue
         # primal + dual residual per boundary: the primal part collapses to 0
         # once p and q share a grid, the dual part keeps decaying with actual
         # convergence progress — their sum drives the bit-width everywhere.
@@ -374,7 +490,17 @@ def train_adaptive(key, X, labels, masks, dims, config, epochs: int, *,
             br = chunk_res[i - 1]
             controller.assign(br + br if manage_u else br, e + i)
         bound_res = chunk_res[-1]
+        prev_obj = hist["objective"][-1]
+        e_before = e
         e += c
+        if (mgr is not None and ckpt_every
+                and e_before // ckpt_every != e // ckpt_every):
+            extra = {"iteration": e, "prev_obj": prev_obj,
+                     "bound_res": bound_res,
+                     "controller": controller.state_dict()}
+            if ledger is not None:
+                extra["ledger"] = ledger.summary()
+            mgr.save(e, state, extra=extra)
     hist["val_acc"].append(float(pdadmm.forward_accuracy(
         state, X, labels, masks["val"])))
     hist["test_acc"].append(float(pdadmm.forward_accuracy(

@@ -35,7 +35,7 @@ from typing import Dict, List, Optional, Sequence
 class WireRecord:
     iteration: int
     edge: str            # e.g. "q_fwd/l3", "grad_psum/W0"
-    kind: str            # "ppermute" | "psum" | "handshake"
+    kind: str            # "ppermute" | "psum" | "handshake" | "header"
     elements: int
     bits: int
     payload_bytes: int   # logical: codec body (packed/container) + header
@@ -46,11 +46,28 @@ class WireRecord:
             object.__setattr__(self, "wire_bytes", self.payload_bytes)
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultRecord:
+    """One fault-accounting event (kept OFF the byte records so corrupted
+    traffic never skews the wire totals): ``kind`` is the lifecycle stage —
+    ``injected`` (the plan put it on the wire), ``detected`` (a failed
+    integrity verdict), ``recovered`` (last-good substituted in-step) or
+    ``rolled_back`` (a checkpoint rollback answered it). `iteration` is the
+    fault-plan TICK, `edge` a ring edge name or ``"step"`` for rollbacks."""
+    iteration: int
+    edge: str
+    kind: str
+    count: int = 1
+    detail: str = ""
+
+
 class CommLedger:
-    """Append-only wire-byte ledger with per-iteration / per-edge rollups."""
+    """Append-only wire-byte ledger with per-iteration / per-edge rollups
+    (plus a separate fault-event ledger, see :class:`FaultRecord`)."""
 
     def __init__(self):
         self.records: List[WireRecord] = []
+        self.faults: List[FaultRecord] = []
 
     # -- recording ---------------------------------------------------------
     def record(self, iteration: int, edge: str, kind: str, elements: int,
@@ -76,6 +93,15 @@ class CommLedger:
         """Scalar fp32 exchange (e.g. shared min/max for a psum grid)."""
         return self.record(iteration, edge, "handshake", n_scalars, 32,
                            4 * n_scalars)
+
+    def record_fault(self, iteration: int, edge: str, kind: str,
+                     count: int = 1, detail: str = "") -> FaultRecord:
+        """Append one fault lifecycle event (``injected`` / ``detected`` /
+        ``recovered`` / ``rolled_back``) — separate from the byte records,
+        so fault chaos never perturbs the wire accounting."""
+        rec = FaultRecord(int(iteration), edge, kind, int(count), detail)
+        self.faults.append(rec)
+        return rec
 
     def record_span(self, start_iteration: int, n_iterations: int, edge: str,
                     kind: str, elements: int, bits: int,
@@ -133,11 +159,19 @@ class CommLedger:
                 out[r.edge] += r.wire_bytes
         return dict(out)
 
+    def fault_counts(self) -> Dict[str, Dict[str, int]]:
+        """``{edge: {kind: count}}`` rollup of the fault ledger."""
+        out: Dict[str, Dict[str, int]] = defaultdict(lambda: defaultdict(int))
+        for f in self.faults:
+            out[f.edge][f.kind] += f.count
+        return {e: dict(k) for e, k in out.items()}
+
     def baseline_fp32_bytes(self) -> int:
-        """What the same traffic would cost uncompressed (handshakes are an
-        artifact of compression, so they count 0 in the baseline)."""
+        """What the same traffic would cost uncompressed (handshakes and
+        integrity headers are artifacts of compression / fault tolerance,
+        so they count 0 in the baseline)."""
         return sum(4 * r.elements for r in self.records
-                   if r.kind != "handshake")
+                   if r.kind not in ("handshake", "header"))
 
     def savings_vs_fp32(self) -> float:
         base = self.baseline_fp32_bytes()
@@ -145,7 +179,7 @@ class CommLedger:
 
     def summary(self) -> Dict:
         its = self.per_iteration()
-        return {
+        out = {
             "total_bytes": self.total_bytes(),
             # physical split: bytes the links actually carried
             # ("payload_bytes_physical" is the documented alias)
@@ -158,9 +192,15 @@ class CommLedger:
             else 0.0,
             "by_edge": self.per_edge(),
         }
+        if self.faults:
+            # only fault-tolerant runs grow this key — plain summaries are
+            # byte-identical to the pre-sentinel ledger
+            out["faults"] = self.fault_counts()
+        return out
 
     def merge(self, other: "CommLedger") -> "CommLedger":
         self.records.extend(other.records)
+        self.faults.extend(other.faults)
         return self
 
 

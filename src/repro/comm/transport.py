@@ -46,6 +46,16 @@ every per-boundary, per-iteration schedule the controller emits. Physical
 bytes on the link are the container capacity (charged as `wire_bytes`); the
 active codec's packed size is the logical `payload_bytes` the schedule
 saves.
+
+Wire integrity (fault tolerance): :mod:`repro.comm.faults` wraps these
+exchanges with a checksum/seqno header (int32[2] ppermuted next to the
+payload, +8 physical wire bytes per slab per link, kind ``"header"`` on
+the ledger) and a deterministic fault injector —
+:class:`~repro.comm.faults.SentinelExchange` composes the codec /
+container formats defined here rather than re-implementing them, and the
+same :func:`~repro.comm.faults.payload_checksum` verifies packed
+``quantized_psum`` gather payloads. The header format and the
+``metrics["health"]`` schema are documented in that module's docstring.
 """
 from __future__ import annotations
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm import faults as FT
 from repro.comm.codecs import (FP32, Fp32Codec, GridCodec, WireCodec,
                                WirePayload, codec_for_grid)
 from repro.comm.transport import (ContainerExchange, NeighborExchange,
@@ -156,7 +157,9 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
                           donate: bool = False,
                           p_codec: Optional[WireCodec] = None,
                           q_codec: Optional[WireCodec] = None,
-                          wire: Optional[PaddedWire] = None):
+                          wire: Optional[PaddedWire] = None,
+                          health: bool = False,
+                          faults: Optional[FT.FaultPlan] = None):
     """Build the jit-able distributed ADMM iteration; returns (step, specs).
 
     overlap=False (the paper-faithful ordering): ``step(state, Xp, labels,
@@ -195,6 +198,22 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
     schedule-independent: per-boundary, per-iteration mixed widths with
     exactly one compilation. Mutually exclusive with `p_codec`/`q_codec`;
     u still flies fp32.
+
+    `health=True` (or any `faults=` plan) builds the SENTINEL step: every
+    boundary slab flies with the int32[2] checksum/seqno integrity header
+    (:mod:`repro.comm.faults` documents the format), the carry grows a
+    :class:`~repro.comm.faults.GoodSlabs` of last-verified boundaries
+    (``state`` becomes ``(StackState, GoodSlabs)``; under overlap each
+    in-flight slab becomes a ``(payload, header)`` pair), the step takes a
+    trailing :class:`~repro.comm.faults.FaultControls` argument, and
+    ``metrics["health"]`` reports wire verdicts / finite checks / the
+    objective-spike flag. A failed wire verdict substitutes the last-good
+    slab in-step (inexact-ADMM-legal). `faults=` additionally traces the
+    deterministic injector around each exchange; with the default
+    ``health=False, faults=None`` the compiled program, carry layout and
+    metrics are exactly the pre-sentinel ones. Prime the GoodSlabs carry
+    with :func:`make_sentinel_primer` (and the overlap carry with
+    ``make_overlap_primer(..., sentinel=True)``).
     """
     nu, rho = config.nu, config.rho
     p_grid = config.grid if config.quantize_p else None
@@ -209,6 +228,15 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
     ex_q = NeighborExchange("model", q_codec)
     ex_u = NeighborExchange("model", FP32)
     cex = None if wire is None else ContainerExchange("model", wire)
+    sentinel = bool(health) or faults is not None
+    if sentinel:
+        sx_q = FT.SentinelExchange(
+            "model", 0, codec=None if wire is not None else q_codec,
+            wire=wire, plan=faults)
+        sx_u = FT.SentinelExchange("model", 1, codec=FP32, plan=faults)
+        sx_p = FT.SentinelExchange(
+            "model", 2, codec=None if wire is not None else p_codec,
+            wire=wire, plan=faults)
     dp = _dp_axes(mesh)
     n_stages = mesh.shape["model"]
     assert L % n_stages == 0, (L, n_stages)
@@ -218,11 +246,15 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
 
     uk = config.use_kernels
 
-    def stage_body(carry, Xp, labels, label_mask, widths=None):
+    def stage_body(carry, Xp, labels, label_mask, widths=None, ctl=None):
         if overlap:
-            st, (q_fly, u_fly) = carry
+            st_c, (q_fly, u_fly) = carry
         else:
-            st = carry
+            st_c = carry
+        if sentinel:
+            st, good = st_c
+        else:
+            st = st_c
         sidx = jax.lax.axis_index("model")
         gidx = sidx * m_loc + jnp.arange(m_loc)          # global layer ids
         is_first = (gidx == 0)[:, None, None]
@@ -238,7 +270,23 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         # overlap: the ppermutes were issued at the END of the previous
         # iteration (same values — st.q/st.u ARE that iteration's outputs);
         # only decode+splice happens here.
-        if overlap:
+        if sentinel:
+            # a carried slab was stamped by last tick's controls
+            exp_qu = ctl.seqno - 1 if overlap else ctl.seqno
+            slab_shape = st.q[-1:].shape
+            if not overlap:
+                q_fly = sx_q.start(st.q[-1:], ctl, +1,
+                                   sel=sel_q if cex is not None else None)
+                u_fly = sx_u.start(st.u[-1:], ctl, +1)
+            qb, ok_q = sx_q.finish(
+                q_fly, ctl, exp_qu, slab_shape, st.q.dtype, good.q, +1,
+                sel_src=sel_q_prev if cex is not None else None)
+            ub, ok_u = sx_u.finish(u_fly, ctl, exp_qu, slab_shape,
+                                   st.u.dtype, good.u, +1)
+            q_prev = jnp.concatenate([qb, st.q[:-1]], axis=0)
+            u_prev = jnp.concatenate([ub, st.u[:-1]], axis=0)
+            good_q, good_u = qb, ub
+        elif overlap:
             q_prev = (cex.finish_shift_from_prev(q_fly, st.q, sel_q_prev)
                       if cex is not None
                       else ex_q.finish_shift_from_prev(q_fly, st.q))
@@ -273,8 +321,13 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         # done — the W/b/z solves below never read p_next, so the message
         # rides under them and is finished right before the q-update.
         if overlap:
-            p_fly = (cex.start_shift_from_next(p, sel_p) if cex is not None
-                     else ex_p.start_shift_from_next(p))
+            if sentinel:
+                p_fly = sx_p.start(p[:1], ctl, -1,
+                                   sel=sel_p if cex is not None else None)
+            else:
+                p_fly = (cex.start_shift_from_next(p, sel_p)
+                         if cex is not None
+                         else ex_p.start_shift_from_next(p))
 
         # ---- W-update ------------------------------------------------------
         def W_upd(p_, W_, b_, z_, qp, up, r_):
@@ -299,7 +352,17 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         z = jnp.where(is_last, z_last, z_hidden)
 
         # ---- q-update (needs p_{l+1} = next layer's NEW p) -------------------
-        if cex is not None:
+        if sentinel:
+            # the backward p slab always flies within its own tick
+            if not overlap:
+                p_fly = sx_p.start(p[:1], ctl, -1,
+                                   sel=sel_p if cex is not None else None)
+            pb, ok_p = sx_p.finish(
+                p_fly, ctl, ctl.seqno, p[:1].shape, p.dtype, good.p, -1,
+                sel_src=sel_p_next if cex is not None else None)
+            p_next = jnp.concatenate([p[1:], pb], axis=0)
+            good_p = pb
+        elif cex is not None:
             p_next = (cex.finish_shift_from_next(p_fly, p, sel_p_next)
                       if overlap else
                       cex.shift_from_next(p, sel_p, sel_p_next))
@@ -320,10 +383,25 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         # ring messages fly under the metrics psums below and next entry's
         # residual computation, and carry the encoded slabs across.
         if overlap:
-            out_fly = ((cex.start_shift_from_prev(q, sel_q)
-                        if cex is not None
-                        else ex_q.start_shift_from_prev(q)),
-                       ex_u.start_shift_from_prev(u))
+            if sentinel:
+                new_q_fly = sx_q.start(q[-1:], ctl, +1,
+                                       sel=sel_q if cex is not None else None)
+                new_u_fly = sx_u.start(u[-1:], ctl, +1)
+                if faults is not None:
+                    # delayed delivery: MY carry keeps the stale pair when
+                    # my upstream source's send is late (detected next tick
+                    # by the stale seqno in the carried header)
+                    late = ctl.delay[jnp.mod(sidx - 1, n_stages)]
+                    hold = lambda old, fresh: jax.tree.map(
+                        lambda o, f: jnp.where(late, o, f), old, fresh)
+                    new_q_fly = hold(q_fly, new_q_fly)
+                    new_u_fly = hold(u_fly, new_u_fly)
+                out_fly = (new_q_fly, new_u_fly)
+            else:
+                out_fly = ((cex.start_shift_from_prev(q, sel_q)
+                            if cex is not None
+                            else ex_q.start_shift_from_prev(q)),
+                           ex_u.start_shift_from_prev(u))
 
         # ---- metrics ------------------------------------------------------------
         res_sq = jax.lax.psum(jnp.sum(r * r), ("model",) + dp)
@@ -344,7 +422,30 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         new = StackState(p, W, b, z, q, u)
         metrics = {"residual": jnp.sqrt(res_sq), "objective": lag,
                    "stage_residuals": jnp.sqrt(seg)}
-        return ((new, out_fly) if overlap else new), metrics
+        if sentinel:
+            axes = ("model",) + dp
+            i32 = jnp.int32
+
+            def all_finite(t):
+                return jax.lax.psum(
+                    jnp.sum(~jnp.isfinite(t), dtype=i32), axes) == 0
+
+            metrics["health"] = {
+                "wire_bad": jnp.stack(
+                    [jax.lax.psum((~o).astype(i32), axes)
+                     for o in (ok_q, ok_u, ok_p)]),
+                "p_finite": all_finite(p), "W_finite": all_finite(W),
+                "b_finite": all_finite(b), "z_finite": all_finite(z),
+                "residual_finite": jnp.isfinite(res_sq) & jnp.isfinite(lag),
+                "objective_spike": (
+                    jnp.isfinite(ctl.prev_obj)
+                    & (lag > ctl.prev_obj
+                       + FT.SPIKE_TOL * (1.0 + jnp.abs(ctl.prev_obj)))),
+            }
+            out_state = (new, FT.GoodSlabs(q=good_q, u=good_u, p=good_p))
+        else:
+            out_state = new
+        return ((out_state, out_fly) if overlap else out_state), metrics
 
     def _local_lagrangian(st, rr, q_prev, u_prev, is_first, is_last, nu, rho):
         # rr = z - pW - b at the NEW iterate, chained from the update family
@@ -356,17 +457,36 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
         val += jnp.sum(u_prev * d) + 0.5 * rho * jnp.sum(d * d)
         return val
 
+    slab_spec = P("model", dp)
+    state_specs = ((stack_specs,
+                    FT.GoodSlabs(slab_spec, slab_spec, slab_spec))
+                   if sentinel else stack_specs)
     if overlap:
-        carry_specs = (stack_specs,
-                       (_payload_spec(wire if wire is not None else q_codec,
-                                      dp),
-                        _payload_spec(FP32, dp)))
+        hdr_spec = P(("model",) + dp)
+
+        def fly_spec(c):
+            ps = _payload_spec(c, dp)
+            return (ps, hdr_spec) if sentinel else ps
+
+        carry_specs = (state_specs,
+                       (fly_spec(wire if wire is not None else q_codec),
+                        fly_spec(FP32)))
     else:
-        carry_specs = stack_specs
-    if wire is not None:
+        carry_specs = state_specs
+    if wire is not None or sentinel:
+        # trailing replicated extras: the widths table (wire path) and the
+        # FaultControls block (sentinel path), in that order
+        extra_specs = (P(),) * ((wire is not None) + sentinel)
+
+        def wrapped(c, Xp, lab, msk, *extra):
+            return stage_body(
+                c, Xp, lab, msk,
+                widths=extra[0] if wire is not None else None,
+                ctl=extra[-1] if sentinel else None)
+
         smapped = shard_map(
-            stage_body, mesh=mesh,
-            in_specs=(carry_specs, P(dp), P(dp), P(dp), P()),
+            wrapped, mesh=mesh,
+            in_specs=(carry_specs, P(dp), P(dp), P(dp)) + extra_specs,
             out_specs=(carry_specs, P()),
             check_rep=False)
     else:
@@ -380,18 +500,56 @@ def make_distributed_step(mesh: Mesh, L: int, n_classes: int,
 
 
 def make_overlap_primer(mesh: Mesh, q_codec: WireCodec = FP32, *,
-                        wire: Optional[PaddedWire] = None):
+                        wire: Optional[PaddedWire] = None,
+                        sentinel: bool = False):
     """Start the FIRST iteration's forward q/u boundary exchange for an
     ``overlap=True`` step: ``prime(q, u) -> (q_payload, u_payload)`` — the
     in-flight carry half. `q_codec` must match the step's q wire (u always
     flies fp32, as in `make_distributed_step`). With `wire` (the padded-
     container step) the primer is ``prime(q, u, widths)`` — the q slab is
     encoded into the container at the widths table's traced q sels, so one
-    compiled primer serves every schedule."""
+    compiled primer serves every schedule.
+
+    `sentinel=True` primes the carry of a ``health=/faults=`` step: the
+    primer takes a trailing traced ``seqno`` (stamp it with ``tick - 1`` —
+    the tick whose tail WOULD have issued this exchange) and each fly half
+    becomes the sentinel ``(payload, header)`` pair. Priming is always
+    clean: no injection, a fresh checksum."""
     dp = _dp_axes(mesh)
     ex_q = NeighborExchange("model", q_codec)
     ex_u = NeighborExchange("model", FP32)
     cex = None if wire is None else ContainerExchange("model", wire)
+    n_stages = mesh.shape["model"]
+    if sentinel:
+        sx_q = FT.SentinelExchange(
+            "model", 0, codec=None if wire is not None else q_codec,
+            wire=wire, plan=None)
+        sx_u = FT.SentinelExchange("model", 1, codec=FP32, plan=None)
+        hdr_spec = P(("model",) + dp)
+
+        def prime_s(q, u, seqno):
+            ctl = FT.null_controls(n_stages, seqno=seqno)
+            return (sx_q.start(q[-1:], ctl, +1), sx_u.start(u[-1:], ctl, +1))
+
+        def prime_container_s(q, u, widths, seqno):
+            ctl = FT.null_controls(n_stages, seqno=seqno)
+            sel_q = widths[0, jax.lax.axis_index("model")]
+            return (sx_q.start(q[-1:], ctl, +1, sel=sel_q),
+                    sx_u.start(u[-1:], ctl, +1))
+
+        if wire is not None:
+            return jax.jit(shard_map(
+                prime_container_s, mesh=mesh,
+                in_specs=(P("model", dp), P("model", dp), P(), P()),
+                out_specs=((_payload_spec(wire, dp), hdr_spec),
+                           (_payload_spec(FP32, dp), hdr_spec)),
+                check_rep=False))
+        return jax.jit(shard_map(
+            prime_s, mesh=mesh,
+            in_specs=(P("model", dp), P("model", dp), P()),
+            out_specs=((_payload_spec(q_codec, dp), hdr_spec),
+                       (_payload_spec(FP32, dp), hdr_spec)),
+            check_rep=False))
 
     def prime(q, u):
         return (ex_q.start_shift_from_prev(q), ex_u.start_shift_from_prev(u))
@@ -412,6 +570,51 @@ def make_overlap_primer(mesh: Mesh, q_codec: WireCodec = FP32, *,
         in_specs=(P("model", dp), P("model", dp)),
         out_specs=(_payload_spec(q_codec, dp), _payload_spec(FP32, dp)),
         check_rep=False))
+
+
+def make_sentinel_primer(mesh: Mesh, p_codec: WireCodec = FP32,
+                         q_codec: WireCodec = FP32, *,
+                         wire: Optional[PaddedWire] = None):
+    """Initial :class:`~repro.comm.faults.GoodSlabs` for a sentinel step:
+    ``prime(q, u, p) -> GoodSlabs`` (``prime(q, u, p, widths)`` with a
+    padded-container `wire`). Each slab is produced by a CLEAN codec-
+    faithful ring shift — exactly the boundary a fault-free tick would
+    decode — so a fault on the very first tick already substitutes the
+    right value."""
+    dp = _dp_axes(mesh)
+    ex_q = NeighborExchange("model", q_codec)
+    ex_u = NeighborExchange("model", FP32)
+    ex_p = NeighborExchange("model", p_codec)
+    cex = None if wire is None else ContainerExchange("model", wire)
+    n_stages = mesh.shape["model"]
+
+    def prime(q, u, p):
+        return FT.GoodSlabs(
+            q=ex_q.shift_from_prev(q)[:1],
+            u=ex_u.shift_from_prev(u)[:1],
+            p=ex_p.shift_from_next(p)[-1:])
+
+    def prime_container(q, u, p, widths):
+        sidx = jax.lax.axis_index("model")
+        sel_q = widths[0, sidx]
+        sel_q_prev = widths[0, jnp.mod(sidx - 1, n_stages)]
+        sel_p = widths[1, sidx]
+        sel_p_next = widths[1, jnp.mod(sidx + 1, n_stages)]
+        return FT.GoodSlabs(
+            q=cex.shift_from_prev(q, sel_q, sel_q_prev)[:1],
+            u=ex_u.shift_from_prev(u)[:1],
+            p=cex.shift_from_next(p, sel_p, sel_p_next)[-1:])
+
+    gspec = FT.GoodSlabs(P("model", dp), P("model", dp), P("model", dp))
+    if wire is not None:
+        return jax.jit(shard_map(
+            prime_container, mesh=mesh,
+            in_specs=(P("model", dp),) * 3 + (P(),),
+            out_specs=gspec, check_rep=False))
+    return jax.jit(shard_map(
+        prime, mesh=mesh,
+        in_specs=(P("model", dp),) * 3,
+        out_specs=gspec, check_rep=False))
 
 
 def shard_rows(V: int, dp_total: int) -> tuple:
@@ -543,6 +746,28 @@ def _record_qu_pair(ledger, iteration: int, mesh, L, V, h,
                   wb["u_fwd"])
 
 
+def _sentinel_links(mesh) -> int:
+    """Sentinel-checked links per edge per iteration: one slab per stage
+    per data-parallel ring."""
+    links = mesh.shape["model"]
+    for a in ("pod", "data"):
+        links *= mesh.shape.get(a, 1)
+    return links
+
+
+def _record_sentinel_headers(ledger, start: int, n: int, mesh,
+                             edges=FT.EDGES) -> None:
+    """Charge the integrity headers a sentinel step flies: int32[2] per
+    slab per link per edge, physical ``wire_bytes`` only (kind ``header``,
+    zero logical payload — excluded from the fp32 baseline like
+    handshakes; integrity overhead is not part of the compression story)."""
+    links = _sentinel_links(mesh)
+    for edge in edges:
+        ledger.record_span(start, n, edge, "header", 2 * links, 32,
+                           payload_bytes=0,
+                           wire_bytes=FT.SENTINEL_HEADER_BYTES * links)
+
+
 # ---------------------------------------------------------------------------
 # Replay cost-model hooks: trace a step variant into the analysis DAG and
 # price schedules / the overlap knob against predicted wall time. These live
@@ -658,11 +883,212 @@ def step_cost_model(mesh, L: int, n_classes: int, config: ADMMConfig,
     return rp.ScheduleCostModel(dag, costs, edge_bytes, n_workers=n_workers)
 
 
+_UNSET = object()
+
+
+def _ft_train_loop(*, mesh, state, specs, data, L, V, h, n_classes, config,
+                   epochs, hist, ledger, controller, codecs_for, step_cache,
+                   overlap, faults, ckpt, ckpt_every, resume, recovery):
+    """The sentinel training loop behind ``distributed_train(faults=/
+    health=/ckpt=)``: per-iteration Python driver running ``health=True``
+    steps, with last-good substitution compiled in, host-side fault
+    accounting, checkpointing, and rollback recovery. Returns
+    ``(state, hist)``; see the `distributed_train` docstring for the
+    policy."""
+    from repro.ckpt.manager import CheckpointManager
+    Xp_s, lab, msk = data
+    mgr = None
+    if ckpt is not None:
+        mgr = ckpt if hasattr(ckpt, "save") else CheckpointManager(str(ckpt))
+    rec = recovery if recovery is not None else FT.RecoveryConfig()
+    n_stages = mesh.shape["model"]
+    links = _sentinel_links(mesh)
+    dp_total = links // n_stages
+    shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
+
+    def ft_step(bits):
+        k = ("sentinel", bits)
+        if k not in step_cache:
+            pc, qc = codecs_for(bits)
+            step_cache[k] = make_distributed_step(
+                mesh, L, n_classes, config, overlap=overlap,
+                p_codec=pc, q_codec=qc, health=True, faults=faults)[0]
+        return step_cache[k]
+
+    good_primers, fly_primers = {}, {}
+
+    def prime_good(bits, st):
+        if bits not in good_primers:
+            pc, qc = codecs_for(bits)
+            good_primers[bits] = make_sentinel_primer(mesh, pc, qc)
+        return good_primers[bits](st.q, st.u, st.p)
+
+    def prime_fly(bits, st, seqno):
+        if bits not in fly_primers:
+            fly_primers[bits] = make_overlap_primer(
+                mesh, codecs_for(bits)[1], sentinel=True)
+        return fly_primers[bits](st.q, st.u, jnp.asarray(seqno, jnp.int32))
+
+    def charge_pair(it, old_bits, suffix):
+        # a q/u pair (and its headers) that crossed the link un-consumed
+        _record_qu_pair(ledger, it, mesh, L, V, h, *codecs_for(old_bits),
+                        suffix)
+        for en in ("q_fwd/", "u_fwd/"):
+            ledger.record(it, en + suffix, "header", 2 * links, 32,
+                          payload_bytes=0,
+                          wire_bytes=FT.SENTINEL_HEADER_BYTES * links)
+
+    state0 = state
+    ctl_state0 = controller.state_dict() if controller is not None else None
+    fault_counts = {en: {"injected": 0, "detected": 0, "recovered": 0}
+                    for en in FT.EDGES}
+    ft_trace = []
+    n_rb = 0
+    e, tick = 0, 0
+    prev_obj = float("inf")
+    stage_res = 0.0
+    good, inflight, cur_bits = None, None, _UNSET
+
+    def _restore_latest(with_tick: bool):
+        nonlocal state, e, tick, prev_obj, stage_res
+        state, manifest = mgr.restore(like=state, shardings=shardings)
+        ex = manifest.get("extra") or {}
+        e = int(ex.get("iteration", 0))
+        prev_obj = float(ex.get("prev_obj", float("inf")))
+        stage_res = float(ex.get("residual", 0.0))
+        if with_tick:
+            # cross-process resume continues the plan clock; an in-run
+            # rollback NEVER rewinds it (transient wire events)
+            tick = int(ex.get("tick", tick))
+        if controller is not None and ex.get("controller"):
+            controller.load_state_dict(ex["controller"])
+        del hist["objective"][e:]
+        del hist["residual"][e:]
+
+    if resume and mgr is not None and mgr.latest_step() is not None:
+        _restore_latest(with_tick=True)
+
+    def _save():
+        extra = {"iteration": e, "tick": tick, "prev_obj": prev_obj,
+                 "residual": stage_res,
+                 "controller": (controller.state_dict()
+                                if controller is not None else None)}
+        if ledger is not None:
+            extra["ledger"] = ledger.summary()
+        mgr.save(e, state, extra=extra)
+
+    while e < epochs:
+        if controller is not None:
+            (bits,) = controller.assign([stage_res], e)
+            hist["schedules"].append(bits)
+        else:
+            bits = None
+        step = ft_step(bits)
+        p_codec, q_codec = codecs_for(bits)
+        if good is None or bits != cur_bits:
+            if overlap and inflight is not None and ledger is not None:
+                charge_pair(e, cur_bits, "dropped")
+            good = prime_good(bits, state)
+            inflight = prime_fly(bits, state, tick - 1) if overlap else None
+            cur_bits = bits
+        ctl = (faults.controls(tick, n_stages, prev_obj=prev_obj)
+               if faults is not None
+               else FT.null_controls(n_stages, seqno=tick,
+                                     prev_obj=prev_obj))
+        carry = (((state, good), inflight) if overlap else (state, good))
+        out, m = step(carry, Xp_s, lab, msk, ctl)
+        if overlap:
+            (new_state, new_good), new_inflight = out
+        else:
+            (new_state, new_good), new_inflight = out, None
+        hlth = jax.device_get(m["health"])
+        wire_bad = [int(x) for x in hlth["wire_bad"]]
+        healthy = (all(bool(hlth[k]) for k in
+                       ("p_finite", "W_finite", "b_finite", "z_finite",
+                        "residual_finite"))
+                   and not bool(hlth["objective_spike"]))
+        # -- fault accounting (every attempt, healthy or not) --------------
+        if faults is not None:
+            for (en, s_, kind) in faults.events(tick, n_stages):
+                ft_trace.append((tick, en, int(s_), kind))
+                # one event corrupts that link's slab on EVERY dp ring
+                fault_counts[en]["injected"] += dp_total
+                if ledger is not None:
+                    ledger.record_fault(tick, en, "injected", dp_total,
+                                        detail=kind)
+        for en, bad in zip(FT.EDGES, wire_bad):
+            if bad:
+                # every failed verdict substituted last-good in-step
+                fault_counts[en]["detected"] += bad
+                fault_counts[en]["recovered"] += bad
+                if ledger is not None:
+                    ledger.record_fault(tick, en, "detected", bad)
+                    ledger.record_fault(tick, en, "recovered", bad)
+        if ledger is not None:
+            # the attempt's bytes moved whether or not it is accepted
+            _record_ring_span(ledger, e, 1, mesh, L, V, h, p_codec, q_codec)
+            _record_sentinel_headers(ledger, e, 1, mesh)
+        tick += 1
+        if healthy:
+            state, good, inflight = new_state, new_good, new_inflight
+            prev_obj = float(m["objective"])
+            stage_res = float(m["residual"])
+            hist["objective"].append(prev_obj)
+            hist["residual"].append(stage_res)
+            e += 1
+            if mgr is not None and ckpt_every and e % ckpt_every == 0:
+                _save()
+        else:
+            n_rb += 1
+            if ledger is not None:
+                ledger.record_fault(tick - 1, "step", "rolled_back", 1)
+            if n_rb > rec.max_rollbacks:
+                raise RuntimeError(
+                    f"distributed_train: {n_rb} rollbacks exceeded "
+                    f"max_rollbacks={rec.max_rollbacks} — persistent "
+                    "divergence, not transient faults")
+            if overlap and ledger is not None:
+                # the failed attempt's carry pair is discarded
+                charge_pair(e, cur_bits, "dropped")
+            if mgr is not None and mgr.latest_step() is not None:
+                _restore_latest(with_tick=False)
+            else:
+                state = state0
+                e = 0
+                prev_obj = float("inf")
+                stage_res = 0.0
+                del hist["objective"][:]
+                del hist["residual"][:]
+                if controller is not None and ctl_state0 is not None:
+                    controller.load_state_dict(ctl_state0)
+            if controller is not None:
+                controller.force_widest(e, rec.cooldown)
+            good, inflight, cur_bits = None, None, _UNSET
+
+    if overlap and ledger is not None and cur_bits is not _UNSET:
+        # the tail pair still in flight in the carry at termination
+        charge_pair(epochs, cur_bits, "inflight")
+    hist["faults"] = {
+        "per_edge": fault_counts,
+        "injected": sum(c["injected"] for c in fault_counts.values()),
+        "detected": sum(c["detected"] for c in fault_counts.values()),
+        "recovered": sum(c["recovered"] for c in fault_counts.values()),
+        "rolled_back": n_rb,
+        "ticks": tick,
+        "trace": ft_trace,
+    }
+    return state, hist
+
+
 def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
                       config: ADMMConfig, epochs: int, *, ledger=None,
                       controller=None, grids_by_bits=None,
                       overlap=False, chunk: int = 32,
-                      mixed_width: bool = False, cost_table=None):
+                      mixed_width: bool = False, cost_table=None,
+                      faults: Optional[FT.FaultPlan] = None,
+                      health: bool = False, ckpt=None,
+                      ckpt_every: int = 0, resume: bool = False,
+                      recovery: Optional[FT.RecoveryConfig] = None):
     """End-to-end stage-parallel training loop (small meshes / tests).
 
     The no-controller path rides a chunked ``lax.scan`` driver
@@ -706,6 +1132,29 @@ def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
     (:func:`choose_overlap_for`, priced by `cost_table` — a calibrated
     :class:`repro.analysis.costs.CostTable`; without one the hand default,
     overlap on, applies). The resolved value lands in ``hist["overlap"]``.
+
+    Fault tolerance (any of `faults` / `health=True` / `ckpt`) switches to
+    the SENTINEL loop: every iteration runs a ``health=True`` step (wire
+    integrity headers + last-good substitution + finite/spike sentinels,
+    see :mod:`repro.comm.faults`), `faults` injects its deterministic chaos
+    schedule, and an UNHEALTHY iteration (non-finite state/metrics or an
+    objective spike — what undetected corruption causes) is rolled back:
+    restore the latest checkpoint (or the initial state when none exists),
+    re-prime the good-slab and overlap carries, and
+    :meth:`BitWidthController.force_widest` for ``recovery.cooldown``
+    control steps. `ckpt` is a :class:`repro.ckpt.manager.CheckpointManager`
+    or a directory path; ``ckpt_every=k`` saves atomically every k accepted
+    iterations (ADMM state + iteration/objective + controller schedule
+    state + ledger rollups in the manifest), ``resume=True`` restores the
+    latest checkpoint before training — restore goes through the CURRENT
+    mesh's shardings, so resuming onto a different mesh shape is elastic by
+    construction. ``hist["faults"]`` accounts every injected event
+    (re-enumerated from the plan) against detected/recovered wire verdicts
+    and rollbacks; the ledger (if any) gains per-edge fault counters and
+    the header wire bytes. The plan tick advances every ATTEMPTED
+    iteration and is never rewound by a rollback — faults are transient
+    wire events, so a replayed iteration does not re-suffer them.
+    Incompatible with ``mixed_width=True`` for now.
     """
     V, h = Xp.shape
     if overlap == "replay":
@@ -750,7 +1199,24 @@ def distributed_train(mesh, key, Xp, labels, masks, L, n_classes,
     msk = put(masks["train"], P(dp))
     hist = {"objective": [], "residual": [], "schedules": []}
 
-    if mixed_width:
+    ft_mode = faults is not None or bool(health) or ckpt is not None
+    if (resume or ckpt_every) and ckpt is None:
+        raise ValueError("resume=/ckpt_every= need ckpt= (a "
+                         "CheckpointManager or a directory path)")
+    if ft_mode and mixed_width:
+        raise NotImplementedError(
+            "mixed_width is not supported with faults/health/ckpt yet — "
+            "the fault-tolerant loop drives the uniform-codec step family")
+
+    if ft_mode:
+        state, hist = _ft_train_loop(
+            mesh=mesh, state=state, specs=specs, data=(Xp_s, lab, msk),
+            L=L, V=V, h=h, n_classes=n_classes, config=config,
+            epochs=epochs, hist=hist, ledger=ledger, controller=controller,
+            codecs_for=codecs_for, step_cache=step_cache, overlap=overlap,
+            faults=faults, ckpt=ckpt, ckpt_every=ckpt_every, resume=resume,
+            recovery=recovery)
+    elif mixed_width:
         assert controller is not None and grids_by_bits is not None, \
             "mixed_width needs a controller and grids_by_bits"
         wire = PaddedWire.from_grids(grids_by_bits)

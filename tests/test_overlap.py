@@ -174,12 +174,13 @@ def test_make_distributed_step_kwargs_observable():
     signature check below until it gets an observability assertion here."""
     out = _run(PRELUDE + """
 import inspect
-from repro.analysis.jaxpr_tools import collective_profile
+from repro.analysis.jaxpr_tools import collective_profile, count_primitive
 from repro.comm.codecs import GridCodec
 sig = inspect.signature(SP.make_distributed_step)
 kw = {n for n, p in sig.parameters.items()
       if p.kind == inspect.Parameter.KEYWORD_ONLY}
-assert kw == {"overlap", "donate", "p_codec", "q_codec", "wire"}, (
+assert kw == {"overlap", "donate", "p_codec", "q_codec", "wire",
+              "health", "faults"}, (
     "new kwarg(s) %r: add an observability assertion for each" % kw)
 
 V, h, L, C = 64, 32, 4, 4
@@ -223,6 +224,28 @@ widths = jnp.zeros((2, 2), jnp.int32)
 dts = sorted(p["dtype"] for p in collective_profile(
     jax.make_jaxpr(cw)(state, *args, widths).jaxpr))
 assert dts == ["float32", "uint8", "uint8"], dts
+
+# health: every boundary exchange grows its int32[2] integrity-header
+# ppermute next to the payload one (3 -> 6), and the sentinel step takes
+# the FaultControls block — but traces NO injection machinery (no xor)
+from repro.comm import faults as F
+hs, _ = SP.make_distributed_step(mesh, L, C, cfg, health=True)
+good = SP.make_sentinel_primer(mesh)(state.q, state.u, state.p)
+ctl = F.null_controls(2)
+h_jaxpr = jax.make_jaxpr(hs)((state, good), *args, ctl).jaxpr
+h_prof = collective_profile(h_jaxpr)
+assert len(h_prof) == 6, h_prof
+assert sorted(p["dtype"] for p in h_prof).count("int32") == 3, h_prof
+assert count_primitive(h_jaxpr, "xor") == 0
+
+# faults: an ACTIVE FaultPlan traces the bit-flip injector (xor machinery
+# appears; `active` only zeroes its masks, so one program serves faulty
+# and clean ticks alike)
+fs, _ = SP.make_distributed_step(mesh, L, C, cfg, health=True,
+                                 faults=F.FaultPlan(seed=0, flip_rate=0.1))
+f_jaxpr = jax.make_jaxpr(fs)((state, good), *args, ctl).jaxpr
+assert len(collective_profile(f_jaxpr)) == 6
+assert count_primitive(f_jaxpr, "xor") > 0
 print("KWARGS_OK")
 """)
     assert "KWARGS_OK" in out
