@@ -204,6 +204,18 @@ def main():
           f"(clean run reached {hist['objective'][-1]:.3f}); "
           f"per-edge faults: {led_ft.fault_counts()}")
 
+    # every claim above is also a standing contract: the static linter
+    # re-derives dispatch/schedule/wire/memory/dtype facts from the traced
+    # programs alone (no execution) — same checks as `python -m
+    # repro.analysis.lint --all` in CI, summarized here for a fast subset
+    from repro.analysis import contracts as CT
+    names = ["baseline", "overlap", "int8_wire", "psum_int8_w4"]
+    findings = CT.check_all(names)
+    print("\nprogram-contract lint (static — traced, never run):")
+    print(CT.summary_table(findings, names))
+    n_err = sum(1 for f in findings if f.severity == "error")
+    print(f"  {n_err} error(s) across {len(names)} configs")
+
 
 if __name__ == "__main__":
     main()

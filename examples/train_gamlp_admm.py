@@ -10,6 +10,7 @@ Section V-C configuration; at k*d = 4x1433 inputs and |V|=2485 this is
   # kill it mid-run, run again: resumes from the latest checkpoint
 """
 import argparse
+import functools
 import time
 
 import jax
@@ -49,7 +50,6 @@ def main():
         start = manifest["step"] + 1
         print(f"resumed from step {start}")
 
-    import functools
     step = jax.jit(functools.partial(pdadmm.iterate, config=cfg))
     t0 = time.time()
     for e in range(start, args.epochs):

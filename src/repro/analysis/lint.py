@@ -1,0 +1,125 @@
+"""``python -m repro.analysis.lint`` — the program-contract linter CLI.
+
+Statically verifies every registered step/psum configuration against its
+declared program plan (:mod:`repro.analysis.contracts`) and runs the
+source-level passes (:mod:`repro.analysis.static_checks`), with no step
+execution: everything comes from abstract tracing and lowering on
+simulated CPU devices (forced below, BEFORE jax is imported).
+
+Exit status is 1 iff any error-severity finding survives — the CI lint
+job runs this on both ``REPRO_KERNELS={ref,interpret}`` legs and uploads
+the JSON report as an artifact.
+
+    python -m repro.analysis.lint --all                  # everything
+    python -m repro.analysis.lint --config overlap       # one spec
+    python -m repro.analysis.lint --all --format=json --out LINT.json
+    python -m repro.analysis.lint --list                 # registry
+"""
+from __future__ import annotations
+
+import os
+
+# Simulated devices MUST be requested before jax initializes its backend;
+# the registered 2x2 meshes and world-4 psum specs need 8.
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/lint.py -> repo root is three levels above src/
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def build_report(names=None, families=None, *, examples=True,
+                 deadcode=True, root=None) -> dict:
+    """Run the selected passes; returns the machine-readable report."""
+    from repro.analysis import contracts as CT
+    from repro.analysis import static_checks as SC
+    from repro.kernels import ops
+    findings = list(CT.check_all(names, families))
+    root = root or _repo_root()
+    if examples and os.path.isdir(os.path.join(root, "examples")):
+        findings.extend(SC.check_examples(root))
+    if deadcode and os.path.isdir(os.path.join(root, "src/repro")):
+        findings.extend(SC.check_deadcode(root))
+    counts = {s: sum(1 for f in findings if f.severity == s)
+              for s in CT.SEVERITIES}
+    specs = [s.name for s in CT.STEP_SPECS + CT.PSUM_SPECS]
+    return {
+        "policy": ops.dispatch_policy(),
+        "kernels_enabled": ops.kernels_enabled(),
+        "configs": specs if not names else list(names),
+        "counts": counts,
+        "findings": [f.to_dict() for f in findings],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static program-contract linter (no step execution)")
+    ap.add_argument("--all", action="store_true",
+                    help="lint every registered configuration (default "
+                         "when no --config is given)")
+    ap.add_argument("--config", action="append", default=[],
+                    help="lint one registered spec (repeatable)")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated contract families to run")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered specs and contracts, then exit")
+    ap.add_argument("--no-examples", action="store_true",
+                    help="skip the examples/ staleness pass")
+    ap.add_argument("--no-deadcode", action="store_true",
+                    help="skip the src/repro dead-code pass")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import contracts as CT
+    if args.list:
+        for s in CT.STEP_SPECS:
+            print(f"step  {s.name}")
+        for s in CT.PSUM_SPECS:
+            print(f"psum  {s.name}")
+        for c in CT.CONTRACTS.values():
+            print(f"contract  {c.key:26s} [{c.severity}] {c.description}")
+        return 0
+
+    names = args.config or None
+    families = args.families.split(",") if args.families else None
+    report = build_report(names, families,
+                          examples=not args.no_examples,
+                          deadcode=not args.no_deadcode)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+    if args.format == "json":
+        json.dump(report, sys.stdout, indent=2)
+        print()
+    else:
+        findings = [CT.Finding(**f) for f in report["findings"]]
+        configs = report["configs"] if names else None
+        print(f"policy={report['policy']} "
+              f"kernels_enabled={report['kernels_enabled']}")
+        print(CT.summary_table(findings, configs))
+        for f in findings:
+            print(f"{f.severity.upper():5s} {f.config}: [{f.key}] "
+                  f"{f.message}")
+        c = report["counts"]
+        print(f"{c['error']} error(s), {c['warn']} warning(s), "
+              f"{c['info']} info")
+    return 1 if report["counts"]["error"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

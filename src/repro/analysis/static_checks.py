@@ -1,0 +1,270 @@
+"""Source-level static passes for the lint CLI: examples staleness and
+dead code.
+
+Both passes are pure-`ast` (stdlib only — the pinned container ships no
+third-party linter) and emit the same :class:`repro.analysis.contracts.
+Finding` records as the trace-level contract families, so one report
+format serves all of `python -m repro.analysis.lint`.
+
+* :func:`check_examples` — import/staleness lint over ``examples/``:
+  every ``repro.*`` import must resolve, every keyword argument passed to
+  a resolvable repro callable must exist in its signature, and known
+  deprecated API spellings are flagged with their replacement.
+* :func:`check_deadcode` — unused/duplicate imports and unreachable
+  statements in ``src/repro/``. The pinned configuration lives in
+  :data:`DEADCODE_IGNORE`; the intentionally-dormant model-zoo configs are
+  excluded there (each entry says why), everything else must stay clean —
+  CI fails on any error finding this pass emits.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import importlib
+import inspect
+import os
+
+from repro.analysis.contracts import Finding
+
+# Deprecated spelling -> the replacement the finding points at.
+DEPRECATED_APIS = {
+    "comm_bytes_per_iteration":
+        "repro.comm.ledger.admm_bytes_per_iteration",
+}
+
+# Pinned dead-code exclusions (fnmatch against the repo-relative posix
+# path). Every entry must say WHY the file is exempt; anything not listed
+# here is held to zero findings.
+DEADCODE_IGNORE = {
+    "src/repro/configs/*.py":
+        "dormant model-zoo architecture tables: kept importable for the "
+        "serving/bench surface even while no tier-1 test instantiates "
+        "them, so unused symbols are expected",
+}
+
+
+def _rel(path: str, root: str) -> str:
+    return os.path.relpath(path, root).replace(os.sep, "/")
+
+
+def _py_files(base: str):
+    for dirpath, _, names in os.walk(base):
+        for n in sorted(names):
+            if n.endswith(".py"):
+                yield os.path.join(dirpath, n)
+
+
+# ---------------------------------------------------------------------------
+# examples/ staleness
+# ---------------------------------------------------------------------------
+
+def _resolve_imports(tree: ast.AST):
+    """name -> imported object, for every ``repro.*`` import that resolves
+    (unresolvable ones come back in the errors list)."""
+    objs, errors = {}, []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if not a.name.startswith("repro"):
+                    continue
+                try:
+                    mod = importlib.import_module(a.name)
+                except Exception as e:  # noqa: BLE001 — report, don't crash
+                    errors.append((node.lineno, a.name, None, str(e)))
+                    continue
+                objs[a.asname or a.name.split(".")[0]] = \
+                    mod if a.asname else importlib.import_module(
+                        a.name.split(".")[0])
+                if a.asname:
+                    objs[a.asname] = mod
+        elif isinstance(node, ast.ImportFrom):
+            if not (node.module or "").startswith("repro"):
+                continue
+            try:
+                mod = importlib.import_module(node.module)
+            except Exception as e:  # noqa: BLE001
+                errors.append((node.lineno, node.module, None, str(e)))
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                if not hasattr(mod, a.name):
+                    # `from pkg import submodule`: the attribute only
+                    # exists once the submodule itself is imported
+                    try:
+                        sub = importlib.import_module(
+                            f"{node.module}.{a.name}")
+                    except Exception as e:  # noqa: BLE001
+                        errors.append((node.lineno, node.module, a.name,
+                                       str(e) or "attribute does not "
+                                                 "exist"))
+                        continue
+                    objs[a.asname or a.name] = sub
+                    continue
+                objs[a.asname or a.name] = getattr(mod, a.name)
+    return objs, errors
+
+
+def _call_target(node: ast.Call, objs: dict):
+    """The imported repro object a call resolves to, if any."""
+    f = node.func
+    if isinstance(f, ast.Name):
+        return objs.get(f.id)
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+        base = objs.get(f.value.id)
+        if base is not None:
+            return getattr(base, f.attr, None)
+    return None
+
+
+def check_examples(root: str, subdir: str = "examples"):
+    """Import/staleness findings over every script in `root`/`subdir`."""
+    findings = []
+    base = os.path.join(root, subdir)
+    for path in _py_files(base):
+        rel = _rel(path, root)
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        try:
+            tree = ast.parse(src, filename=path)
+        except SyntaxError as e:
+            findings.append(Finding("examples.syntax", "error", rel,
+                                    f"does not parse: {e}", {}))
+            continue
+        objs, errors = _resolve_imports(tree)
+        for lineno, module, attr, why in errors:
+            what = f"{module}.{attr}" if attr else module
+            findings.append(Finding(
+                "examples.import", "error", rel,
+                f"line {lineno}: import of {what} is stale ({why})",
+                {"line": lineno, "target": what}))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                target = _call_target(node, objs)
+                if target is None or not callable(target):
+                    continue
+                try:
+                    sig = inspect.signature(target)
+                except (TypeError, ValueError):
+                    continue
+                params = sig.parameters
+                has_var_kw = any(p.kind == inspect.Parameter.VAR_KEYWORD
+                                 for p in params.values())
+                if has_var_kw:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg is not None and kw.arg not in params:
+                        findings.append(Finding(
+                            "examples.stale_kwarg", "error", rel,
+                            f"line {node.lineno}: "
+                            f"{getattr(target, '__name__', target)}("
+                            f"{kw.arg}=...) — no such keyword "
+                            f"(signature: {sig})",
+                            {"line": node.lineno, "kwarg": kw.arg}))
+            name = None
+            if isinstance(node, ast.Attribute):
+                name = node.attr
+            elif isinstance(node, ast.Name):
+                name = node.id
+            if name in DEPRECATED_APIS:
+                findings.append(Finding(
+                    "examples.deprecated_api", "warn", rel,
+                    f"line {node.lineno}: {name} is deprecated — use "
+                    f"{DEPRECATED_APIS[name]}",
+                    {"line": node.lineno, "name": name}))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# src/repro dead code
+# ---------------------------------------------------------------------------
+
+def _import_bindings(tree: ast.AST, *, top_level_only: bool = False):
+    """(lineno, bound name, display target) for every import binding.
+    `top_level_only` restricts to module-scope statements (function-local
+    lazy imports are a deliberate idiom here — they defer jax-heavy module
+    loads — so the duplicate rule must not see them)."""
+    out = []
+    nodes = tree.body if top_level_only else ast.walk(tree)
+    for node in nodes:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out.append((node.lineno, a.asname or a.name.split(".")[0],
+                            a.name))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name != "*":
+                    out.append((node.lineno, a.asname or a.name,
+                                f"{node.module}.{a.name}"))
+    return out
+
+
+def _used_names(tree: ast.AST):
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            used.add(node.value)          # __all__ entries, doc references
+    return used
+
+
+def _unreachable(tree: ast.AST):
+    """(lineno of dead stmt, lineno of the terminator) pairs."""
+    out = []
+    terminal = (ast.Return, ast.Raise, ast.Break, ast.Continue)
+    for node in ast.walk(tree):
+        body = getattr(node, "body", None)
+        if not isinstance(body, list):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            stmts = getattr(node, field, None) or []
+            for i, stmt in enumerate(stmts[:-1]):
+                if isinstance(stmt, terminal):
+                    out.append((stmts[i + 1].lineno, stmt.lineno))
+                    break
+    return out
+
+
+def check_deadcode(root: str, subdir: str = "src/repro"):
+    """Unused/duplicate-import and unreachable-statement findings over
+    `root`/`subdir`, honoring :data:`DEADCODE_IGNORE`."""
+    findings = []
+    base = os.path.join(root, subdir)
+    for path in _py_files(base):
+        rel = _rel(path, root)
+        if any(fnmatch.fnmatch(rel, pat) for pat in DEADCODE_IGNORE):
+            continue
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        lines = src.splitlines()
+        tree = ast.parse(src, filename=path)
+        if os.path.basename(path) == "__init__.py":
+            continue                      # imports ARE the export surface
+        used = _used_names(tree)
+        for lineno, name, target in _import_bindings(tree):
+            if "noqa" in (lines[lineno - 1] if lineno <= len(lines)
+                          else ""):
+                continue
+            if name not in used:
+                findings.append(Finding(
+                    "deadcode.unused_import", "error", rel,
+                    f"line {lineno}: {target!r} imported as {name!r} but "
+                    f"never used", {"line": lineno, "name": name}))
+        seen = {}
+        for lineno, name, target in _import_bindings(tree,
+                                                     top_level_only=True):
+            if (name, target) in seen:
+                findings.append(Finding(
+                    "deadcode.duplicate_import", "warn", rel,
+                    f"line {lineno}: {target!r} already imported at line "
+                    f"{seen[(name, target)]}", {"line": lineno}))
+            seen.setdefault((name, target), lineno)
+        for dead, term in _unreachable(tree):
+            findings.append(Finding(
+                "deadcode.unreachable", "warn", rel,
+                f"line {dead}: unreachable (follows the terminator at "
+                f"line {term})", {"line": dead}))
+    return findings

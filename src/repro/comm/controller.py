@@ -26,7 +26,6 @@ import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 
 
 @dataclasses.dataclass(frozen=True)

@@ -478,6 +478,49 @@ class ContainerExchange:
         return self.wire.capacity(boundary_shape)
 
 
+@dataclasses.dataclass(frozen=True)
+class PsumProgramPlan:
+    """What a :func:`quantized_psum` trace MUST contain for one
+    (codec, world) point — the declarative side of the linter's
+    ``schedule.psum_mode`` / ``wire.psum_bytes`` contracts, computed next
+    to the mode rule it verifies (:func:`psum_mode`).
+
+      * `collective`      — the physical primitive carrying the payload
+        (``all_gather`` on the gather path, ``psum`` otherwise),
+      * `operand_dtype`   — that primitive's payload operand dtype (packed
+        uint8/uint16 container, int32 code-sum, or raw fp32),
+      * `operand_bytes`   — the payload bytes one shard injects, which by
+        construction equals ``psum_wire_bytes(...).wire_bytes``,
+      * `handshake`       — True iff the affine min/max agreement
+        (``pmin``/``pmax``) must appear (static grids need none).
+    """
+    mode: str
+    collective: str
+    operand_dtype: str
+    operand_bytes: int
+    handshake: bool
+
+
+def psum_program_plan(codec: WireCodec, shape, world_size: int,
+                      mode: Optional[str] = None) -> PsumProgramPlan:
+    """The traced-program shape :func:`quantized_psum` commits to for this
+    (codec, shape, world) point. Byte accounting defers to
+    :func:`psum_wire_bytes` so plan and ledger can never disagree."""
+    cost = psum_wire_bytes(codec, shape, world_size, mode)
+    n = _n_elements(shape)
+    if cost.mode == "psum":
+        return PsumProgramPlan("psum", "psum", "float32", cost.wire_bytes,
+                               False)
+    handshake = isinstance(codec, AffineCodec)
+    if cost.mode == "gather":
+        # the packed container is byte planes whatever the width
+        return PsumProgramPlan("gather", "all_gather", "uint8",
+                               cost.wire_bytes, handshake)
+    assert cost.mode == "code_psum" and cost.wire_bytes == 4 * n
+    return PsumProgramPlan("code_psum", "psum", "int32", cost.wire_bytes,
+                           handshake)
+
+
 def record_psum(ledger, iteration: int, edge: str, codec: WireCodec, shape,
                 world_size: int, mode: Optional[str] = None) -> PsumWireCost:
     """Put one shard's compressed-psum traffic on the ledger: the payload

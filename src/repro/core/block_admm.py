@@ -22,8 +22,6 @@ quantized ppermute as ``stage_parallel``.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -10,8 +10,7 @@ runtime (`stage_parallel.py`), and the Pallas-accelerated path (`kernels/`).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

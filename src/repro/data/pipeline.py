@@ -9,11 +9,10 @@ and straggler re-assignment safe.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 

@@ -8,7 +8,6 @@ structure, enabling layer/model parallelism.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,6 @@ per-layer updates local and cheap.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -65,6 +65,48 @@ from repro.kernels import (admm_pgrad as _pg, backtrack_phi as _bt,
 
 POLICY_ENV = "REPRO_KERNELS"
 
+# Pallas kernel-body names as they appear in `pallas_call` eqn params
+# (`name_and_src_info.name`) — the introspection surface the program-
+# contract linter (`repro.analysis.contracts`) keys its per-kernel
+# dispatch counts on. vmap'd dispatches get a `_batched` suffix (the
+# layer-stacked fast path wraps every stacked op in vmap).
+KERNEL_NAMES = {
+    "fused_linear": "_matmul_kernel",
+    "admm_pgrad": "kernel",            # nested def inside admm_pgrad
+    "backtrack_resnorm": "_resnorm_kernel",
+    "fista_zlast": "_fista_step_kernel",
+    "relu_zupdate": "_zupdate_kernel",
+    "flash_attention": "_flash_kernel",
+    "grid_project": "_project_kernel",
+    "grid_encode": "_encode_kernel",
+    "grid_decode": "_decode_kernel",
+}
+
+
+def pack_kernel_names(bits: int):
+    """(pack, unpack) kernel-body names for a `bits`-wide wire container, or
+    ``None`` for widths whose packing is the identity (4 < bits <= 8: the
+    uint8 codes ARE the container, so no kernel is dispatched)."""
+    if bits <= 4:
+        return "_pack4_kernel", "_unpack4_kernel"
+    if bits <= 8:
+        return None
+    return "_pack16_kernel", "_unpack16_kernel"
+
+
+def dispatch_policy() -> str:
+    """The ``REPRO_KERNELS`` policy in force right now (normalized)."""
+    policy = os.environ.get(POLICY_ENV, "auto")
+    return policy if policy in ("auto", "ref", "pallas", "interpret") \
+        else "auto"
+
+
+def kernels_enabled() -> bool:
+    """True iff a bare dispatch (``use_pallas=None``) routes to a Pallas
+    kernel under the current policy/backend — i.e. whether `pallas_call`
+    eqns should appear in a freshly traced program at all."""
+    return _resolve(None, None)[0]
+
 
 def _resolve(use_pallas, interpret):
     """-> (use_pallas: bool, interpret: bool), per the module policy."""

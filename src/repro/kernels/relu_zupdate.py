@@ -6,8 +6,6 @@ HBM round-trips in the naive jnp expression chain.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

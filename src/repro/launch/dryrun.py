@@ -18,11 +18,11 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import hlo as hlo_mod
-from repro.configs.base import (ALL_SHAPES, ARCH_IDS, SHAPES_BY_NAME,
+from repro.configs.base import (ARCH_IDS, SHAPES_BY_NAME,
                                 arch_shape_cells, get_arch)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (make_prefill_step, make_serve_step,
-                                make_train_step, to_named)
+                                to_named)
 from repro.models.api import build
 from repro.parallel import sharding as sh
 from repro.train import optim

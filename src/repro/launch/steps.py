@@ -4,16 +4,11 @@ These are the functions the multi-pod dry-run lowers and the trainer runs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
-from repro.configs.base import ArchConfig, ShapeConfig
-from repro.models.api import ModelBundle, build
-from repro.parallel import sharding as sh
+from repro.configs.base import ShapeConfig
+from repro.models.api import ModelBundle
 from repro.train import optim
 
 

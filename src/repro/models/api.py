@@ -9,11 +9,10 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import common, jamba, layers, mamba2, transformer, whisper

@@ -7,8 +7,7 @@ lowers the jnp path.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ exact linear recurrence (O(1) state per token) — this is what makes the
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -8,7 +8,6 @@ critical for the 512-device dry-run). Loss is chunked over the sequence so
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

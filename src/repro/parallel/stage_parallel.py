@@ -21,8 +21,6 @@ identical (no load imbalance — the paper's equal-width large-scale setup).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -775,6 +773,129 @@ def _record_sentinel_headers(ledger, start: int, n: int, mesh,
 # `make_distributed_step`'s signature is pinned by the observability tests,
 # so everything goes through these helpers instead of new step kwargs.
 # ---------------------------------------------------------------------------
+
+class StepProgramPlan(NamedTuple):
+    """The traced-program shape one `make_distributed_step` configuration
+    commits to — the declarative half of the program-contract linter
+    (:mod:`repro.analysis.contracts`), computed HERE so the invariants live
+    next to the step builder that owns them rather than being
+    reverse-engineered in tests.
+
+      * `edge_events` — every expected ppermute in ISSUE ORDER, as
+        ``(edge, wire_dtype, bytes_per_link)``. Sentinel steps interleave an
+        ``<edge>.header`` event (int32[2], 8 B) after each payload; the
+        per-link payload bytes come straight from ``codec.payload_bytes`` /
+        ``PaddedWire.capacity`` on the boundary slab, so a traced ppermute
+        whose operand disagrees is an undercounting wire.
+      * `n_carried` — in-flight slabs leaving through the carry (2 under
+        overlap: the double-buffered q/u forward exchange; else 0).
+      * `min_work_to_consumer` — solver-shaped eqns REQUIRED between each
+        consumed collective and its first reader (overlap puts the whole
+        W/b/z solve family behind the p exchange; 0 demands the fused
+        issue-where-consumed baseline ordering *exactly*).
+      * `pallas_calls` — exact per-kernel dispatch counts (base body names,
+        vmap ``_batched`` suffix normalized away) under the CURRENT
+        ``REPRO_KERNELS`` policy; empty when the policy or
+        ``config.use_kernels`` routes to the jnp oracles.
+      * `expects_xor` / `donate` / `takes_widths` / `sentinel` / `overlap`
+        — presence flags for the fault injector's xor machinery, donation
+        markers, the trailing widths table, headers, and the carried
+        exchange.
+    """
+    edge_events: tuple
+    n_carried: int
+    min_work_to_consumer: int
+    pallas_calls: dict
+    expects_xor: bool
+    donate: bool
+    takes_widths: bool
+    sentinel: bool
+    overlap: bool
+
+
+def _codec_wire_format(codec, slab):
+    """(wire dtype, per-link bytes) of one boundary slab under `codec`."""
+    if codec.bits >= 32:
+        return "float32", codec.payload_bytes(slab)
+    dtype = "uint8" if codec.bits <= 8 else "uint16"
+    return dtype, codec.payload_bytes(slab)
+
+
+def step_program_plan(mesh, L: int, n_classes: int, config: ADMMConfig, *,
+                      V: int, h: int, overlap: bool = False,
+                      donate: bool = False,
+                      p_codec: Optional[WireCodec] = None,
+                      q_codec: Optional[WireCodec] = None,
+                      wire: Optional[PaddedWire] = None,
+                      health: bool = False,
+                      faults: Optional[FT.FaultPlan] = None
+                      ) -> StepProgramPlan:
+    """Expected program shape for this `make_distributed_step` kwarg point
+    (same signature plus the ``V``/``h`` problem size). Pure bookkeeping —
+    nothing is traced."""
+    from repro.kernels import ops
+    n_rows = 1
+    for a in ("pod", "data"):
+        n_rows *= mesh.shape.get(a, 1)
+    r0 = shard_rows(V, n_rows)[0]
+    slab = (1, r0, h)
+    if p_codec is None:
+        p_codec = codec_for_grid(config.grid if config.quantize_p else None)
+    if q_codec is None:
+        q_codec = codec_for_grid(config.grid if config.quantize_q else None)
+    sentinel = bool(health) or faults is not None
+
+    if wire is not None:
+        q_fmt = p_fmt = ("uint8", wire.capacity(slab))
+    else:
+        q_fmt = _codec_wire_format(q_codec, slab)
+        p_fmt = _codec_wire_format(p_codec, slab)
+    u_fmt = ("float32", FP32.payload_bytes(slab))
+    fmt = {"q_fwd": q_fmt, "u_fwd": u_fmt, "p_bwd": p_fmt}
+    # issue order: the overlap body ISSUES p mid-body and q/u at the tail
+    # (the entry exchange is a carry decode, not a collective)
+    order = ("p_bwd", "q_fwd", "u_fwd") if overlap \
+        else ("q_fwd", "u_fwd", "p_bwd")
+    events = []
+    for edge in order:
+        dtype, nbytes = fmt[edge]
+        events.append((edge, dtype, nbytes))
+        if sentinel:
+            events.append((edge + ".header", "int32",
+                           FT.SENTINEL_HEADER_BYTES))
+
+    if config.use_kernels and ops.kernels_enabled():
+        pallas = {
+            ops.KERNEL_NAMES["fused_linear"]: 3,       # residual + p + W
+            ops.KERNEL_NAMES["admm_pgrad"]: 1,
+            ops.KERNEL_NAMES["relu_zupdate"]: 1,
+            ops.KERNEL_NAMES["fista_zlast"]: config.fista_iters + 1,
+        }
+        if config.quantize_p and config.grid is not None:
+            # backtracking p-solve: the while-loop resnorm body traces once
+            pallas[ops.KERNEL_NAMES["backtrack_resnorm"]] = 1
+        if wire is not None:
+            # every non-identity width packs+unpacks both container edges
+            # (q and p) — lax.switch traces ALL branches
+            for b in wire.widths:
+                names = ops.pack_kernel_names(b)
+                if names is not None:
+                    for name in names:
+                        pallas[name] = pallas.get(name, 0) + 2
+    else:
+        pallas = {}
+
+    return StepProgramPlan(
+        edge_events=tuple(events),
+        n_carried=2 if overlap else 0,
+        min_work_to_consumer=2 if overlap else 0,
+        pallas_calls=pallas,
+        expects_xor=faults is not None,
+        donate=donate,
+        takes_widths=wire is not None,
+        sentinel=sentinel,
+        overlap=overlap)
+
 
 def trace_step_dag(mesh, L: int, n_classes: int, config: ADMMConfig, *,
                    V: int, h: int, overlap: bool = False,

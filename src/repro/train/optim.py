@@ -9,7 +9,6 @@ new_state). Moments are fp32 regardless of param dtype (bf16-safe).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

@@ -134,34 +134,25 @@ print("STEP_BITWISE_OK")
 
 
 def test_overlap_moves_ppermutes_off_critical_path():
-    """Jaxpr-level proof that the knob does something: under overlap the q/u
-    boundary ppermutes are CARRIED out of the step body (issued at the end
-    of iteration k, consumed only by iteration k+1's entry), and the p
-    ppermute is issued with the whole W-solve between it and its consumer.
-    The paper-faithful ordering has every ppermute consumed immediately."""
+    """Jaxpr-level proof that the knob does something, now stated once as
+    the registered schedule contracts (repro.analysis.contracts): the
+    `baseline` spec pins every ppermute consumed in-body on the critical
+    path, the `overlap` spec pins the carried q/u pair and the p exchange
+    hidden behind the W-solve. Here both specs must pass their schedule
+    family cleanly AND the overlap plan must bite when the traced program
+    regresses to the paper-faithful ordering (the original silent no-op)."""
     out = _run(PRELUDE + """
-from repro.analysis.jaxpr_tools import collective_profile
-V, h, L, C = 64, 32, 4, 4
-cfg = ADMMConfig(nu=1e-2, rho=1.0)
-state = SP.init_stack(jax.random.PRNGKey(0), jnp.zeros((V, h)), L, cfg)
-args = (jnp.zeros((V, h)), jnp.zeros((V,), jnp.int32), jnp.ones((V,)))
-
-base, _ = SP.make_distributed_step(mesh, L, C, cfg)
-prof = collective_profile(jax.make_jaxpr(base)(state, *args).jaxpr)
-assert len(prof) == 3, prof                      # q fwd, u fwd, p bwd
-assert all(not p["carried"] for p in prof), prof # all consumed in-body
-assert all(p["work_to_consumer"] == 0 for p in prof), prof  # critical path
-
-ov, _ = SP.make_distributed_step(mesh, L, C, cfg, overlap=True)
-fly = SP.make_overlap_primer(mesh)(state.q, state.u)
-prof = collective_profile(jax.make_jaxpr(ov)((state, fly), *args).jaxpr)
-assert len(prof) == 3, prof
-carried = [p for p in prof if p["carried"]]
-consumed = [p for p in prof if not p["carried"]]
-# q/u starts fly across the iteration boundary in the scan carry
-assert len(carried) == 2, prof
-# the in-iteration p exchange hides behind the W-solve contractions
-assert len(consumed) == 1 and consumed[0]["work_to_consumer"] >= 2, prof
+from repro.analysis import contracts as CT
+for name in ("baseline", "overlap"):
+    f = CT.check_contracts(name, families=["schedule"])
+    assert not f, [(x.key, x.message) for x in f]
+plan = CT.ProgramView(CT.get_spec("overlap")).plan
+assert plan.n_carried == 2 and plan.min_work_to_consumer >= 2, plan
+# regression bite: overlap silently off -> schedule contracts must fire
+f = CT.check_contracts("overlap", overrides={"overlap": False},
+                       families=["schedule"])
+assert {x.key for x in f} >= {"schedule.carried",
+                              "schedule.work_to_consumer"}, f
 print("SCHEDULE_OK")
 """)
     assert "SCHEDULE_OK" in out
@@ -170,82 +161,28 @@ print("SCHEDULE_OK")
 def test_make_distributed_step_kwargs_observable():
     """Every documented kwarg of make_distributed_step must observably
     change the traced/lowered program — the regression test that would have
-    caught the original ignored `overlap` flag. A NEW kwarg fails the
-    signature check below until it gets an observability assertion here."""
+    caught the original ignored `overlap` flag, now stated once as the
+    cache contract family (repro.analysis.contracts): cache.kwarg_set pins
+    the kwarg-only surface to the registered cache-key set (a NEW kwarg
+    fails it until it registers contracts), cache.kwarg_observable flips
+    each pinned kwarg and requires a distinct trace fingerprint. The
+    per-kwarg program shapes (carried pair, donor markers, wire dtypes,
+    sentinel headers, xor injector) are each pinned by their own
+    dispatch/schedule/wire/memory contracts over the registered specs."""
     out = _run(PRELUDE + """
+from repro.analysis import contracts as CT
+f = CT.check_contracts("baseline", families=["cache"])
+assert not f, [(x.key, x.message) for x in f]
+# bite check: a kwarg whose flip changes nothing must be rejected
+f = CT.check_contracts("baseline", families=["cache"],
+                       variants={"overlap": {}})
+assert [x.key for x in f] == ["cache.kwarg_observable"], f
+# and the kwarg surface itself is the pinned set
 import inspect
-from repro.analysis.jaxpr_tools import collective_profile, count_primitive
-from repro.comm.codecs import GridCodec
-sig = inspect.signature(SP.make_distributed_step)
-kw = {n for n, p in sig.parameters.items()
+kw = {n for n, p in
+      inspect.signature(SP.make_distributed_step).parameters.items()
       if p.kind == inspect.Parameter.KEYWORD_ONLY}
-assert kw == {"overlap", "donate", "p_codec", "q_codec", "wire",
-              "health", "faults"}, (
-    "new kwarg(s) %r: add an observability assertion for each" % kw)
-
-V, h, L, C = 64, 32, 4, 4
-cfg = ADMMConfig(nu=1e-2, rho=1.0)
-state = SP.init_stack(jax.random.PRNGKey(0), jnp.zeros((V, h)), L, cfg)
-args = (jnp.zeros((V, h)), jnp.zeros((V,), jnp.int32), jnp.ones((V,)))
-
-# overlap: carried in-flight ppermutes appear (0 -> 2)
-base, _ = SP.make_distributed_step(mesh, L, C, cfg)
-ov, _ = SP.make_distributed_step(mesh, L, C, cfg, overlap=True)
-fly = SP.make_overlap_primer(mesh)(state.q, state.u)
-n_carried = lambda prof: sum(p["carried"] for p in prof)
-assert n_carried(collective_profile(
-    jax.make_jaxpr(base)(state, *args).jaxpr)) == 0
-assert n_carried(collective_profile(
-    jax.make_jaxpr(ov)((state, fly), *args).jaxpr)) == 2
-
-# donate: buffer-donation marker in the lowered module
-assert "jax.buffer_donor" not in base.lower(state, *args).as_text()
-dn, _ = SP.make_distributed_step(mesh, L, C, cfg, donate=True)
-assert "jax.buffer_donor" in dn.lower(state, *args).as_text()
-
-# p_codec / q_codec: each independently changes its ppermute's wire dtype
-# (p -> uint8, q -> uint16, u stays fp32)
-qc, _ = SP.make_distributed_step(
-    mesh, L, C, cfg,
-    p_codec=GridCodec(quantize.uniform_grid(8, -2.0, 6.0)),
-    q_codec=GridCodec(quantize.uniform_grid(16, -2.0, 6.0)))
-dts = sorted(p["dtype"] for p in collective_profile(
-    jax.make_jaxpr(qc)(state, *args).jaxpr))
-assert dts == ["float32", "uint16", "uint8"], dts
-
-# wire: the p/q ppermutes become fixed-size uint8 containers (u stays
-# fp32), the step takes the traced widths table, and widths VALUES are not
-# part of the specialization — two different schedules, one compilation
-from repro.comm.transport import PaddedWire
-wire = PaddedWire.from_grids(
-    {b: quantize.uniform_grid(b, -2.0, 6.0) for b in (4, 8, 16)})
-cw, _ = SP.make_distributed_step(mesh, L, C, cfg, wire=wire)
-widths = jnp.zeros((2, 2), jnp.int32)
-dts = sorted(p["dtype"] for p in collective_profile(
-    jax.make_jaxpr(cw)(state, *args, widths).jaxpr))
-assert dts == ["float32", "uint8", "uint8"], dts
-
-# health: every boundary exchange grows its int32[2] integrity-header
-# ppermute next to the payload one (3 -> 6), and the sentinel step takes
-# the FaultControls block — but traces NO injection machinery (no xor)
-from repro.comm import faults as F
-hs, _ = SP.make_distributed_step(mesh, L, C, cfg, health=True)
-good = SP.make_sentinel_primer(mesh)(state.q, state.u, state.p)
-ctl = F.null_controls(2)
-h_jaxpr = jax.make_jaxpr(hs)((state, good), *args, ctl).jaxpr
-h_prof = collective_profile(h_jaxpr)
-assert len(h_prof) == 6, h_prof
-assert sorted(p["dtype"] for p in h_prof).count("int32") == 3, h_prof
-assert count_primitive(h_jaxpr, "xor") == 0
-
-# faults: an ACTIVE FaultPlan traces the bit-flip injector (xor machinery
-# appears; `active` only zeroes its masks, so one program serves faulty
-# and clean ticks alike)
-fs, _ = SP.make_distributed_step(mesh, L, C, cfg, health=True,
-                                 faults=F.FaultPlan(seed=0, flip_rate=0.1))
-f_jaxpr = jax.make_jaxpr(fs)((state, good), *args, ctl).jaxpr
-assert len(collective_profile(f_jaxpr)) == 6
-assert count_primitive(f_jaxpr, "xor") > 0
+assert kw == set(CT.PINNED_STEP_KWARGS), kw
 print("KWARGS_OK")
 """)
     assert "KWARGS_OK" in out
